@@ -1,0 +1,27 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time per call in microseconds (jax results blocked)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """CSV contract of benchmarks.run: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.2f},{derived}")

@@ -1,0 +1,90 @@
+"""Paper Figs. 10/11 analogue: DLRM preprocessing throughput + latency.
+
+Three configurations, exactly Fig. 9's setups:
+  ① vanilla: payload -> host buffer -> CPU preprocessing (per-record
+     Python/numpy on a dedicated core) -> copy to device
+  ② on-path preprocessing (fused Pallas kernel in the chain) but staged
+     through a host buffer copy before device_put
+  ③ full BALBOA: on-path preprocessing + direct-to-device placement
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import emit
+from repro.core.services import PreprocService, ServiceChain
+from repro.data import synthetic as syn
+
+N_DENSE, N_SPARSE, MOD = 13, 26, 100_000
+REC_W = N_DENSE + N_SPARSE
+
+
+def _payloads(total_mb: float):
+    recs_per_pkt = (4096 // 4) // REC_W
+    n_pkts = int(total_mb * 1e6) // 4096
+    n_rec = recs_per_pkt * n_pkts
+    raw = syn.dlrm_shard(0, n_rec, N_DENSE, N_SPARSE)
+    pay = np.zeros((n_pkts, 4096), np.uint8)
+    rec_b = REC_W * 4
+    flat = raw.view(np.uint8).reshape(n_rec, rec_b)
+    for p in range(n_pkts):
+        chunk = flat[p * recs_per_pkt:(p + 1) * recs_per_pkt]
+        pay[p, :recs_per_pkt * rec_b] = chunk.reshape(-1)
+    return raw, pay, n_rec
+
+
+def cpu_preprocess(raw: np.ndarray) -> np.ndarray:
+    dense = np.log1p(np.maximum(raw[:, :N_DENSE], 0).astype(np.float32))
+    sparse = raw[:, N_DENSE:] % MOD
+    return dense, sparse
+
+
+def main():
+    total_mb = 8.0
+    raw, pay, n_rec = _payloads(total_mb)
+    plen = jnp.asarray(np.full(len(pay), 4096, np.int32))
+    payj = jnp.asarray(pay)
+
+    # ① vanilla: host-buffer copy + CPU preprocessing + device copy
+    t0 = time.perf_counter()
+    host_buf = np.asarray(payj).copy()                # DMA to host buffer
+    recs = host_buf.reshape(len(pay), -1)[:, :  (4096 // 4 // REC_W) * REC_W * 4]
+    recs = recs.reshape(-1, REC_W * 4).view(np.int32)
+    dense, sparse = cpu_preprocess(recs)
+    d = jax.device_put((dense, sparse))
+    jax.block_until_ready(d)
+    t1 = time.perf_counter() - t0
+    emit("fig10_vanilla_cpu", t1 * 1e6,
+         f"MBps={total_mb/t1:.1f}")
+
+    # ② on-path preproc + host bounce
+    chain = ServiceChain(on_path=[PreprocService(
+        n_dense=N_DENSE, n_sparse=N_SPARSE, modulus=MOD)])
+    chain.process(payj, plen)                         # compile
+    t0 = time.perf_counter()
+    out, _ = chain.process(payj, plen)
+    host = np.asarray(out)                            # bounce to host
+    d = jax.device_put(host)
+    jax.block_until_ready(d)
+    t2 = time.perf_counter() - t0
+    emit("fig10_onpath_hostcopy", t2 * 1e6, f"MBps={total_mb/t2:.1f}")
+
+    # ③ full BALBOA: on-path preproc, result stays on device
+    t0 = time.perf_counter()
+    out, _ = chain.process(payj, plen)
+    jax.block_until_ready(out)
+    t3 = time.perf_counter() - t0
+    emit("fig10_balboa_direct", t3 * 1e6,
+         f"MBps={total_mb/t3:.1f};vs_vanilla={t1/t3:.1f}x")
+
+    # Fig 11 analogue: latency delta of the host bounce (paper: 20-135us)
+    emit("fig11_direct_vs_host_latency", (t2 - t3) * 1e6,
+         f"saved_us={(t2-t3)*1e6:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper Fig. 4 analogue: RDMA WRITE/READ latency and throughput vs
+buffer size over the switched-network simulator (BALBOA <-> BALBOA).
+
+Latency: ticks for a single buffer transmission + completion polling.
+Throughput: repeated batch transmissions of 64 buffers (paper protocol),
+reported as protocol efficiency (payload packets / total packets) and
+host-pipeline throughput (MB/s through the jitted RX pipeline + chain).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks._util import emit
+from repro.core import packet as pk
+from repro.core.netsim import LinkConfig, Network
+from repro.core.rdma import RdmaNode, run_network
+
+SIZES = (64, 1024, 4096, 32768, 262144, 1048576)
+
+
+def run_once(size: int, op: str = "write"):
+    net = Network(2, LinkConfig(latency_ticks=3, seed=1))
+    a, b = RdmaNode(0, net), RdmaNode(1, net)
+    qpn_a, _, buf_a = a.init_rdma(max(size, 4096) * 2, b)
+    data = np.random.default_rng(0).integers(0, 256, size, dtype=np.uint8)
+    t0 = time.perf_counter()
+    if op == "write":
+        a.rdma_write(qpn_a, data)
+        target, qpn_t = b, 1
+    else:
+        buf_a[:size] = data
+        b.rdma_read(1, size)
+        target, qpn_t = b, 1
+    ticks = run_network([a, b], max_ticks=200_000)
+    wall = time.perf_counter() - t0
+    assert target.check_completed(qpn_t) >= 1
+    return ticks, wall, a.stats.tx_pkts + b.stats.tx_pkts
+
+
+def throughput(size: int, n_bufs: int = 64):
+    net = Network(2, LinkConfig(latency_ticks=3, seed=2))
+    a, b = RdmaNode(0, net, fc_window=256), RdmaNode(1, net, rx_credits=256)
+    qpn_a, _, _ = a.init_rdma(max(size, 4096) * 2, b)
+    data = np.random.default_rng(1).integers(0, 256, size, dtype=np.uint8)
+    t0 = time.perf_counter()
+    for _ in range(n_bufs):
+        a.rdma_write(qpn_a, data)
+        run_network([a, b], max_ticks=100_000)
+    wall = time.perf_counter() - t0
+    payload_pkts = pk.read_resp_npkts(size) * n_bufs
+    eff = payload_pkts / max(a.stats.tx_pkts, 1)
+    mbs = size * n_bufs / wall / 1e6
+    return wall, eff, mbs
+
+
+def main():
+    for size in SIZES:
+        ticks, wall, _ = run_once(size, "write")
+        emit(f"fig4_write_latency_{size}B", wall * 1e6,
+             f"ticks={ticks}")
+        ticks, wall, _ = run_once(size, "read")
+        emit(f"fig4_read_latency_{size}B", wall * 1e6, f"ticks={ticks}")
+    for size in (4096, 32768, 262144):
+        wall, eff, mbs = throughput(size, n_bufs=16)
+        emit(f"fig4_write_throughput_{size}B", wall * 1e6 / 16,
+             f"host_MBps={mbs:.1f};protocol_efficiency={eff:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Paper Fig. 5 analogue: end-to-end latency breakdown per datapath
+element, for 64 B and 4 KB (MTU) packets.
+
+Each stage is timed as its jitted kernel: RX header pipeline (the packet
+processing pipeline), ICRC, retransmission mux (buffer hold+ack), AES,
+DPI, DLRM preprocessing.  The paper's finding to reproduce: the packet
+processing pipeline — not the checksum — dominates the stack latency.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import emit, time_fn
+from repro.core import packet as pk
+from repro.core import pipeline as pipe
+from repro.core.retransmit import RetransmissionBuffer
+from repro.core.services import AesService, DpiService, PreprocService
+from repro.data.dpi_dataset import make_dataset
+from repro.kernels.dpi_mlp import train_dpi_params
+from repro.kernels import ops
+
+BATCH = 16
+
+
+def main():
+    rng = np.random.default_rng(0)
+    x, y = make_dataset(1024, seed=0)
+    dpi_params = train_dpi_params(x, y, steps=150)
+
+    for size in (64, 4096):
+        pay = rng.integers(0, 256, (BATCH, 4096), dtype=np.uint8)
+        plen = np.full(BATCH, size, np.int32)
+        payj, plenj = jnp.asarray(pay), jnp.asarray(plen)
+
+        # 1) packet-processing pipeline (header FSMs)
+        pkts = [pk.Packet(opcode=pk.WRITE_ONLY, qpn=1, psn=i,
+                          payload=pay[i, :size], vaddr=0, dma_len=size)
+                for i in range(BATCH)]
+        batch = {k: jnp.asarray(v)
+                 for k, v in pk.batch_from_packets(pkts).items()}
+        tables = pipe.make_rx_tables(8)
+        us = time_fn(lambda: pipe.rx_pipeline(tables, batch))
+        emit(f"fig5_rx_pipeline_{size}B", us / BATCH, "per-packet")
+
+        # 2) ICRC
+        us = time_fn(lambda: ops.crc32(payj, plenj))
+        emit(f"fig5_icrc_{size}B", us / BATCH, "per-packet")
+
+        # 3) retransmission buffering (host mux)
+        def retx_cycle():
+            rb = RetransmissionBuffer()
+            for p in pkts:
+                rb.hold(1, p, 0)
+            rb.ack(1, pkts[-1].psn)
+            return 0
+        import time as _t
+        t0 = _t.perf_counter()
+        for _ in range(20):
+            retx_cycle()
+        us = (_t.perf_counter() - t0) / 20 * 1e6
+        emit(f"fig5_retx_mux_{size}B", us / BATCH, "per-packet")
+
+        # 4) AES on-path
+        aes = AesService(key=np.arange(16, dtype=np.uint8))
+        us = time_fn(lambda: aes(payj, plenj))
+        emit(f"fig5_aes_{size}B", us / BATCH, "per-packet")
+
+        # 5) DPI parallel-path
+        dpi = DpiService(params=dpi_params)
+        us = time_fn(lambda: dpi(payj, plenj))
+        emit(f"fig5_dpi_{size}B", us / BATCH, "per-packet")
+
+        # 6) DLRM preprocessing
+        pre = PreprocService()
+        us = time_fn(lambda: pre(payj, plenj))
+        emit(f"fig5_preproc_{size}B", us / BATCH, "per-packet")
+
+
+if __name__ == "__main__":
+    main()

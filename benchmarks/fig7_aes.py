@@ -1,0 +1,61 @@
+"""Paper Fig. 7 analogue: AES on the BALBOA datapath vs on the host CPU.
+
+On-datapath: the Pallas AES kernel fused into the jitted service chain —
+one pass over the packet batch, zero host involvement ("scheduling of
+execution is a non-existing problem").
+Host path: payloads staged to host memory, encrypted per-buffer with a
+doorbell-poll-style dispatch (one call per buffer), staged back — the
+paper's CPU+OpenSSL configuration, minus OpenSSL's AES-NI (we report the
+architectural gap, which on real hardware is compounded by the FPGA's
+line rate; see EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._util import emit, time_fn
+from repro.core.services import AesService, ServiceChain
+from repro.kernels import ops
+from repro.kernels.ref import expand_key
+
+KEY = np.arange(16, dtype=np.uint8)
+
+
+def main():
+    rk = expand_key(KEY)
+    for total_kb in (64, 512, 4096):
+        n_pkts = total_kb * 1024 // 4096
+        pay = np.random.default_rng(0).integers(
+            0, 256, (n_pkts, 4096), dtype=np.uint8)
+        plen = np.full(n_pkts, 4096, np.int32)
+
+        # --- on-datapath: fused chain, one jitted pass -------------------
+        chain = ServiceChain(on_path=[AesService(key=KEY)])
+        payj = jnp.asarray(pay)
+        plenj = jnp.asarray(plen)
+        us = time_fn(lambda: chain.process(payj, plenj), iters=5)
+        mbs = total_kb / 1024 / (us / 1e6) * 1e3 / 1e3
+        emit(f"fig7_aes_onpath_{total_kb}KB", us,
+             f"MBps={total_kb/1024/(us/1e6):.1f}")
+        on_us = us
+
+        # --- host path: per-buffer dispatch + staging copies --------------
+        t0 = time.perf_counter()
+        iters = 3
+        for _ in range(iters):
+            out = np.empty_like(pay)
+            for i in range(n_pkts):             # doorbell-per-buffer
+                blocks = jnp.asarray(pay[i].reshape(256, 16))
+                ct = ops.aes_ecb(blocks, rk, impl="ref")
+                out[i] = np.asarray(ct).reshape(4096)   # stage back
+        host_us = (time.perf_counter() - t0) / iters * 1e6
+        emit(f"fig7_aes_host_{total_kb}KB", host_us,
+             f"MBps={total_kb/1024/(host_us/1e6):.1f};"
+             f"speedup={host_us/on_us:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Roofline sweep driver: runs every (arch x shape x mesh) dry-run cell
+in a fresh subprocess (XLA compile caches would otherwise accumulate for
+hours of compiles) and collects roofline terms into a JSONL file.
+
+  PYTHONPATH=src python -m benchmarks.roofline --out results/roofline.jsonl
+  PYTHONPATH=src python -m benchmarks.roofline --single gemma2-2b train_4k 16x16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = (
+    "gemma3-4b", "gemma2-27b", "gemma2-2b", "granite-3-2b", "xlstm-125m",
+    "whisper-base", "deepseek-v3-671b", "deepseek-v2-236b", "qwen2-vl-72b",
+    "recurrentgemma-9b",
+)
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+MESHES = ("16x16", "2x16x16")
+
+_CELL_SNIPPET = r"""
+import json, sys
+from repro.launch.dryrun import run_cell
+arch, shape, mesh = sys.argv[1], sys.argv[2], sys.argv[3]
+override = json.loads(sys.argv[4]) if len(sys.argv) > 4 else None
+r = run_cell(arch, shape, mesh == "2x16x16", opt_override=override,
+             verbose=False)
+print("CELL_RESULT " + json.dumps(r))
+"""
+
+
+def run_one(arch: str, shape: str, mesh: str, override=None,
+            timeout: int = 2400) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    cmd = [sys.executable, "-c", _CELL_SNIPPET, arch, shape, mesh]
+    if override:
+        cmd.append(json.dumps(override))
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env, cwd=os.path.dirname(
+                                  os.path.dirname(os.path.abspath(__file__))))
+        for line in proc.stdout.splitlines():
+            if line.startswith("CELL_RESULT "):
+                return json.loads(line[len("CELL_RESULT "):])
+        return {"arch": arch, "shape": shape, "mesh": mesh, "status": "FAIL",
+                "error": (proc.stderr or proc.stdout)[-500:]}
+    except subprocess.TimeoutExpired:
+        return {"arch": arch, "shape": shape, "mesh": mesh, "status": "FAIL",
+                "error": f"timeout after {timeout}s"}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/roofline.jsonl")
+    ap.add_argument("--single", nargs=3, metavar=("ARCH", "SHAPE", "MESH"))
+    ap.add_argument("--override", default=None,
+                    help="JSON dict of ModelConfig overrides (perf exps)")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args(argv)
+    override = json.loads(args.override) if args.override else None
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skip"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    cells = ([tuple(args.single)] if args.single else
+             [(a, s, m) for a in ARCHS for s in SHAPES for m in MESHES])
+    with open(args.out, "a") as f:
+        for arch, shape, mesh in cells:
+            if (arch, shape, mesh) in done:
+                continue
+            t0 = time.time()
+            r = run_one(arch, shape, mesh, override)
+            r["wall_s"] = round(time.time() - t0, 1)
+            f.write(json.dumps(r) + "\n")
+            f.flush()
+            stat = r.get("status")
+            extra = ""
+            if stat == "ok":
+                t = r["terms"]
+                extra = (f" compute={t['compute_s']*1e3:.1f}ms "
+                         f"mem={t['memory_s']*1e3:.1f}ms "
+                         f"coll={t['collective_s']*1e3:.1f}ms "
+                         f"-> {r['bottleneck']}")
+            elif stat == "FAIL":
+                extra = " " + r.get("error", "")[:160].replace("\n", " ")
+            print(f"[roofline] {arch} x {shape} ({mesh}): {stat}"
+                  f" [{r['wall_s']}s]{extra}", flush=True)
+    print("[roofline] sweep complete")
+
+
+if __name__ == "__main__":
+    main()

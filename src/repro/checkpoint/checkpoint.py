@@ -1,0 +1,119 @@
+"""Sharded checkpointing with elastic restore.
+
+Layout: <dir>/step_<N>/
+           manifest.json        — tree structure, shapes, dtypes, step
+           arrays.npz           — flat leaf arrays (host-gathered)
+
+Design points for 1000+-node operation (scaled to this container):
+  * writes go to a temp dir + atomic rename — a failure mid-write never
+    corrupts the latest checkpoint;
+  * ``restore`` re-device_puts against *whatever mesh is active now* —
+    elastic: a job restarted on a different pod count resumes from the
+    same file (resharding happens at load);
+  * async save: the host copy is snapshotted synchronously (cheap), the
+    file write happens on a background thread so the train loop keeps
+    stepping (overlap with compute).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    out = {}
+    for i, x in enumerate(leaves):
+        a = np.asarray(x)
+        if a.dtype.kind not in "fiub":          # e.g. bfloat16 (kind 'V'):
+            a = a.astype(np.float32)            # no npz codec; restore() casts
+        out[f"leaf_{i}"] = a
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state: Dict[str, Any], blocking: bool = False):
+        """state: arbitrary pytree dict (params, opt_state, rng, ...)."""
+        arrays, treedef = _flatten(state)
+        manifest = {"step": step, "treedef": str(treedef),
+                    "n_leaves": len(arrays)}
+        self.wait()
+        t = threading.Thread(target=self._write, args=(step, arrays, manifest))
+        t.start()
+        self._thread = t
+        if blocking:
+            self.wait()
+
+    def _write(self, step: int, arrays, manifest):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ----------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Dict[str, Any], step: Optional[int] = None,
+                shardings=None) -> Tuple[int, Dict[str, Any]]:
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+        NamedShardings for the *current* mesh (elastic restore)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        leaves_like, treedef = jax.tree.flatten(like)
+        assert len(leaves_like) == len(data.files), \
+            f"checkpoint has {len(data.files)} leaves, expected {len(leaves_like)}"
+        sh_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
+                     else [None] * len(leaves_like))
+        out = []
+        for i, (ref, shd) in enumerate(zip(leaves_like, sh_leaves)):
+            arr = data[f"leaf_{i}"]
+            arr = arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr
+            out.append(jax.device_put(arr, shd) if shd is not None
+                       else jax.device_put(arr))
+        return step, jax.tree.unflatten(treedef, out)

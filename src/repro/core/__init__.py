@@ -1,0 +1,10 @@
+"""RoCE BALBOA core: the paper's contribution as composable modules.
+
+packet / qp / pipeline   — RoCE v2 framing, per-QP tables, RX/TX FSMs
+flow_control             — ACK-clocked windows + RX crediting (§4.3/4.4)
+retransmit / netsim      — reliability under loss (§4.2)
+services                 — on-path & parallel-path enhancements (§5)
+rdma                     — the full endpoint (verbs of §4.6)
+ingest                   — storage -> RDMA -> services -> device (§8)
+sniffer                  — PCAP traffic capture (§4.7)
+"""

@@ -1,0 +1,99 @@
+"""ACK-clocked flow control (paper §4.4) and RX crediting (§4.3).
+
+Flow control sits on the *control path*: an outgoing request either
+passes to the packet pipeline or is queued, bounded by a per-QP budget of
+outstanding packets.  The budget is decreased by passing requests and
+increased by incoming ACKs — "ACK-clocked", compatible with commodity
+NICs, and the hook point for DCQCN/TIMELY-style congestion control.
+
+Crediting guards the *receive* side: the host-facing datapath advertises
+consumption capacity; packets arriving with no credit available are
+dropped (never stalling the pipeline) and recovered by the remote peer's
+retransmission.
+
+Invariants (property-tested in tests/test_transport.py):
+  * outstanding(qp) <= window(qp) at every point in time
+  * a request is never dropped by flow control, only delayed
+  * credits never go negative; total accepted <= total credits granted
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class FlowControlConfig:
+    window: int = 64                 # max outstanding packets per QP
+    congestion_control: str = "ack_clocked"   # | "static"
+
+
+class AckClockedFlowControl:
+    """Per-QP outstanding-packet ledger with a pending queue."""
+
+    def __init__(self, n_qps: int, cfg: FlowControlConfig = FlowControlConfig()):
+        self.cfg = cfg
+        self.budget = [cfg.window] * n_qps
+        self.pending: List[Deque] = [collections.deque() for _ in range(n_qps)]
+        self.outstanding = [0] * n_qps
+        # telemetry
+        self.total_passed = 0
+        self.total_queued = 0
+
+    def request(self, qpn: int, n_pkts: int, payload=None) -> List:
+        """Submit a request of ``n_pkts`` packets.  Returns the list of
+        requests (the given one and/or previously queued ones) that pass
+        to the packet pipeline now."""
+        self.pending[qpn].append((n_pkts, payload))
+        self.total_queued += 1
+        return self._drain(qpn)
+
+    def ack(self, qpn: int, n_pkts: int = 1) -> List:
+        """An ACK returns budget; queued requests may now pass."""
+        self.outstanding[qpn] = max(0, self.outstanding[qpn] - n_pkts)
+        self.budget[qpn] = min(self.cfg.window,
+                               self.budget[qpn] + n_pkts)
+        return self._drain(qpn)
+
+    def _drain(self, qpn: int) -> List:
+        passed = []
+        q = self.pending[qpn]
+        while q and q[0][0] <= self.budget[qpn]:
+            n_pkts, payload = q.popleft()
+            self.budget[qpn] -= n_pkts
+            self.outstanding[qpn] += n_pkts
+            self.total_passed += 1
+            passed.append((n_pkts, payload))
+        return passed
+
+    def queue_depth(self, qpn: int) -> int:
+        return len(self.pending[qpn])
+
+
+class CreditManager:
+    """RX-side crediting: the host-facing datapath grants consumption
+    capacity; a packet consuming a credit that is not there is dropped
+    (paper §4.3 — rely on remote retransmission, never stall)."""
+
+    def __init__(self, n_qps: int, initial_credits: int = 64,
+                 max_credits: int = 64):
+        self.credits = [initial_credits] * n_qps
+        self.max_credits = max_credits
+        self.dropped_no_credit = 0
+        self.accepted = 0
+        self.granted = n_qps * initial_credits
+
+    def try_consume(self, qpn: int, n: int = 1) -> bool:
+        if self.credits[qpn] >= n:
+            self.credits[qpn] -= n
+            self.accepted += n
+            return True
+        self.dropped_no_credit += n
+        return False
+
+    def replenish(self, qpn: int, n: int = 1):
+        """Called when the host-facing DMA engine consumes a payload."""
+        add = min(n, self.max_credits - self.credits[qpn])
+        self.credits[qpn] += add
+        self.granted += add

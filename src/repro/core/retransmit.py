@@ -1,0 +1,102 @@
+"""Retransmission buffer and transport timer (paper §4.2).
+
+All transmitted payloads are held in a dedicated buffer ("directly
+exposed HBM channel" on the FPGA) until the remote end acknowledges
+reception; timeouts or NAKs (PSN sequence errors) release them back onto
+the TX path without another host round-trip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import packet as pk
+
+
+@dataclasses.dataclass
+class _Slot:
+    psn: int
+    packet: pk.Packet
+    deadline: int          # retransmit when now >= deadline
+    retries: int = 0
+
+
+class RetransmissionBuffer:
+    """Per-QP ring of unacked packets, keyed by PSN."""
+
+    MAX_RETRIES = 16
+
+    def __init__(self, timeout_ticks: int = 64, capacity: int = 4096):
+        self.timeout = timeout_ticks
+        self.capacity = capacity
+        self.slots: Dict[int, Dict[int, _Slot]] = {}   # qpn -> psn -> slot
+        self.retransmissions = 0
+        self.exhausted: List[Tuple[int, int]] = []     # fatal (qpn, psn)
+
+    def hold(self, qpn: int, p: pk.Packet, now: int):
+        q = self.slots.setdefault(qpn, {})
+        if len(q) >= self.capacity:
+            raise RuntimeError(f"retransmission buffer overflow qp={qpn}")
+        q[p.psn] = _Slot(p.psn, p.clone(), now + self.timeout)
+
+    def ack(self, qpn: int, ack_psn: int) -> int:
+        """Cumulative ACK: release every slot with psn <= ack_psn
+        (mod-24-bit window).  Returns number released.
+
+        Progress resets the retry counters of the remaining slots —
+        RoCE's retry budget counts *consecutive* no-progress events, not
+        total retransmissions (go-back-N would otherwise burn the budget
+        of healthy flows)."""
+        q = self.slots.get(qpn, {})
+        released = [s for s in q
+                    if ((ack_psn - s) % (pk.PSN_MASK + 1)) <= pk.PSN_MASK // 2]
+        for s in released:
+            del q[s]
+        if released:
+            for slot in q.values():
+                slot.retries = 0
+        return len(released)
+
+    def nak(self, qpn: int, expected_psn: int, now: int) -> List[pk.Packet]:
+        """PSN sequence error at the peer: retransmit from expected_psn."""
+        return self._resend(qpn, expected_psn, now)
+
+    def tick(self, now: int) -> List[Tuple[int, pk.Packet]]:
+        """Transport timer: collect timed-out (local_qpn, packet) pairs.
+        Slots that exhausted their retry budget are evicted (fatal for
+        the flow — surfaced via ``self.exhausted`` so the upper layer
+        can tear down / re-establish the QP)."""
+        out = []
+        for qpn, q in self.slots.items():
+            dead = []
+            for slot in sorted(q.values(), key=lambda s: s.psn):
+                if now >= slot.deadline:
+                    resend = self._bump(qpn, slot, now)
+                    if not resend and slot.retries > self.MAX_RETRIES:
+                        dead.append(slot.psn)
+                    out.extend((qpn, p) for p in resend)
+            for psn in dead:
+                q.pop(psn, None)
+        return out
+
+    def _resend(self, qpn: int, from_psn: int, now: int) -> List[pk.Packet]:
+        q = self.slots.get(qpn, {})
+        out = []
+        for slot in sorted(q.values(), key=lambda s: s.psn):
+            behind = ((slot.psn - from_psn) % (pk.PSN_MASK + 1)) \
+                <= pk.PSN_MASK // 2
+            if behind:
+                out.extend(self._bump(qpn, slot, now))
+        return out
+
+    def _bump(self, qpn: int, slot: _Slot, now: int) -> List[pk.Packet]:
+        slot.retries += 1
+        if slot.retries > self.MAX_RETRIES:
+            self.exhausted.append((qpn, slot.psn))
+            return []
+        slot.deadline = now + self.timeout * (1 << min(slot.retries, 4))
+        self.retransmissions += 1
+        return [slot.packet.clone()]
+
+    def outstanding(self, qpn: int) -> int:
+        return len(self.slots.get(qpn, {}))

@@ -1,0 +1,100 @@
+"""AES-128-ECB Pallas kernel (paper §5.1.1 on-datapath crypto service).
+
+TPU adaptation of the FPGA's 10-stage AES pipeline: instead of one block
+per clock through unrolled rounds, the kernel processes a VMEM tile of
+``BLOCK_N`` 16-byte blocks per grid step with the 10 rounds fully
+unrolled inside the kernel (static Python loop -> straight-line VPU
+code).  S-box lookups are VMEM gathers; GF(2^8) math is shift/xor on
+int32 lanes (the VPU has no 8-bit lanes, so bytes ride in int32).
+
+Validated in interpret mode against ref.py (which itself is pinned to
+FIPS-197 vectors in tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref as R
+from repro.kernels.ref import expand_key  # re-export for services
+
+BLOCK_N = 512           # blocks (of 16 bytes) per VMEM tile: 512*16*4B = 32KiB
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def _xt(x):
+    return ((x << 1) ^ jnp.where((x & 0x80) != 0, 0x1B, 0)) & 0xFF
+
+
+def _encrypt_kernel(blocks_ref, rk_ref, sbox_ref, sidx_ref, out_ref):
+    sbox = sbox_ref[...]
+    sidx = sidx_ref[...]
+    st = blocks_ref[...]
+    rk = rk_ref[...]
+    st = st ^ rk[0][None, :]
+    for r in range(1, 10):
+        st = jnp.take(sbox, st, axis=0)
+        st = jnp.take(st, sidx, axis=1)
+        st = R._mix_columns(st)
+        st = st ^ rk[r][None, :]
+    st = jnp.take(sbox, st, axis=0)
+    st = jnp.take(st, sidx, axis=1)
+    st = st ^ rk[10][None, :]
+    out_ref[...] = st
+
+
+def _decrypt_kernel(blocks_ref, rk_ref, sbox_ref, sidx_ref, out_ref):
+    inv_sbox = sbox_ref[...]
+    iidx = sidx_ref[...]
+    st = blocks_ref[...]
+    rk = rk_ref[...]
+    st = st ^ rk[10][None, :]
+    for r in range(9, 0, -1):
+        st = jnp.take(st, iidx, axis=1)
+        st = jnp.take(inv_sbox, st, axis=0)
+        st = st ^ rk[r][None, :]
+        st = R._inv_mix_columns(st)
+    st = jnp.take(st, iidx, axis=1)
+    st = jnp.take(inv_sbox, st, axis=0)
+    st = st ^ rk[0][None, :]
+    out_ref[...] = st
+
+
+@functools.partial(jax.jit, static_argnames=("decrypt", "interpret"))
+def aes_ecb_pallas(blocks: jax.Array, round_keys, *, decrypt: bool = False,
+                   interpret: bool = INTERPRET) -> jax.Array:
+    """blocks (N, 16) uint8 -> (N, 16) uint8."""
+    n = blocks.shape[0]
+    pad = (-n) % BLOCK_N
+    x = jnp.pad(blocks, ((0, pad), (0, 0))).astype(jnp.int32)
+    rk = jnp.asarray(round_keys).astype(jnp.int32)
+    kernel = _decrypt_kernel if decrypt else _encrypt_kernel
+    sbox = jnp.asarray(R.INV_SBOX if decrypt else R.SBOX)
+    sidx = jnp.asarray(R._INV_SHIFT_IDX if decrypt else R._SHIFT_IDX)
+    out = pl.pallas_call(
+        kernel,
+        grid=((n + pad) // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, 16), lambda i: (i, 0)),
+            pl.BlockSpec((11, 16), lambda i: (0, 0)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+            pl.BlockSpec((16,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N, 16), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad, 16), jnp.int32),
+        interpret=interpret,
+    )(x, rk, sbox, sidx)
+    return out[:n].astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("decrypt",))
+def aes_ecb_ref(blocks: jax.Array, round_keys, *, decrypt: bool = False
+                ) -> jax.Array:
+    if decrypt:
+        return R.aes_decrypt_ref(blocks, round_keys)
+    return R.aes_encrypt_ref(blocks, round_keys)

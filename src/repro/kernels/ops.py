@@ -1,0 +1,43 @@
+"""Jitted public wrappers for every kernel — the ``ops.py`` layer.
+
+Each op dispatches impl="pallas" (pl.pallas_call, interpret-mode on CPU)
+or impl="ref" (the pure-jnp oracle from ref.py)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+from repro.kernels import aes_ecb as _aes
+from repro.kernels import crc32 as _crc
+from repro.kernels import dpi_mlp as _dpi
+from repro.kernels import preproc as _pre
+from repro.kernels.ref import expand_key  # noqa: F401  (re-export)
+
+
+def aes_ecb(blocks: jax.Array, round_keys, *, decrypt: bool = False,
+            impl: str = "pallas") -> jax.Array:
+    if impl == "pallas":
+        return _aes.aes_ecb_pallas(blocks, round_keys, decrypt=decrypt)
+    return _aes.aes_ecb_ref(blocks, round_keys, decrypt=decrypt)
+
+
+def crc32(payload: jax.Array, plen: jax.Array, *, impl: str = "pallas"
+          ) -> jax.Array:
+    if impl == "pallas":
+        return _crc.crc32_pallas(payload, plen)
+    return _crc.crc32_ref(payload, plen)
+
+
+def dpi_scores(payload: jax.Array, params: Dict, *, impl: str = "pallas"
+               ) -> jax.Array:
+    if impl == "pallas":
+        return _dpi.dpi_scores_pallas(payload, params)
+    return _dpi.dpi_scores_ref(payload, params)
+
+
+def preproc(recs: jax.Array, n_dense: int, modulus: int, *,
+            impl: str = "pallas") -> jax.Array:
+    if impl == "pallas":
+        return _pre.preproc_pallas(recs, n_dense, modulus)
+    return _pre.preproc_ref(recs, n_dense, modulus)

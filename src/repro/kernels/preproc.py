@@ -1,0 +1,56 @@
+"""DLRM preprocessing Pallas kernel (paper §8.1).
+
+Fuses the paper's three stateless operators into one pass over a VMEM
+tile of records:
+  Neg2Zero  — clip negative dense features to zero
+  Logarithm — log1p on dense features (large-value compression)
+  Modulus   — restrict sparse feature range for the embedding tables
+
+The FPGA achieves II=1 deep pipelines over 64-byte beats; the TPU dual
+is a single elementwise kernel over (BLOCK_M, record) tiles — one HBM
+read, one write, zero intermediate traffic (vs. three separate ops).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref as R
+
+BLOCK_M = 512
+INTERPRET = jax.default_backend() == "cpu"
+
+
+def _preproc_kernel(recs_ref, out_ref, *, n_dense: int, modulus: int):
+    recs = recs_ref[...]                        # (BM, RW) int32
+    dense = recs[:, :n_dense]
+    sparse = recs[:, n_dense:]
+    d = jnp.log1p(jnp.maximum(dense.astype(jnp.float32), 0.0))
+    d_bits = jax.lax.bitcast_convert_type(d, jnp.int32)
+    s = jnp.remainder(sparse, modulus)
+    out_ref[...] = jnp.concatenate([d_bits, s], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_dense", "modulus",
+                                             "interpret"))
+def preproc_pallas(recs: jax.Array, n_dense: int, modulus: int, *,
+                   interpret: bool = INTERPRET) -> jax.Array:
+    """recs (M, RW) int32 -> (M, RW) int32 (dense part = f32 bits)."""
+    m, rw = recs.shape
+    pad = (-m) % BLOCK_M
+    x = jnp.pad(recs, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_preproc_kernel, n_dense=n_dense, modulus=modulus),
+        grid=((m + pad) // BLOCK_M,),
+        in_specs=[pl.BlockSpec((BLOCK_M, rw), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_M, rw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m + pad, rw), jnp.int32),
+        interpret=interpret,
+    )(x)
+    return out[:m]
+
+
+preproc_ref = R.preproc_ref

@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# NOTE: the two lines above MUST run before any other import — jax locks
+# the device count on first initialization (multi-pod dry-run contract).
+#
+# Multi-pod dry-run: ``.lower().compile()`` every (arch x shape x mesh)
+# cell on the production meshes, print memory/cost analyses, and extract
+# the roofline terms from the compiled HLO (repro.launch.hlo_analysis).
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+#   python -m repro.launch.dryrun --arch deepseek-v3-671b --shape decode_32k --multi-pod
+#   python -m repro.launch.dryrun --all --json /tmp/dryrun.json
+
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.common.config import (LM_SHAPES, ModelConfig, SHAPES_BY_NAME,
+                                 ShapeConfig, TrainConfig)
+from repro.configs import ALL_ARCHS, get_config
+from repro.launch import mesh as mesh_lib
+from repro.launch.hlo_analysis import analyze
+from repro.models import params as P
+from repro.models.model import ENC_LEN_FOR_DECODE, Model, input_specs
+from repro.parallel import sharding as sh
+from repro.train.step import make_decode_step, make_prefill_step, make_train_step
+
+
+def _shardings_for(tree_shapes, tree_axes, mesh, rules, ctx):
+    def one(s, a):
+        return NamedSharding(mesh, sh.resolve_spec(s.shape, a, mesh, rules, ctx))
+    return jax.tree.map(one, tree_shapes, tree_axes,
+                        is_leaf=lambda t: isinstance(t, jax.ShapeDtypeStruct))
+
+
+def _axes_is_leaf(t):
+    return isinstance(t, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in t)
+
+
+def build_lowering(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                   opt_override: Optional[Dict[str, Any]] = None):
+    """Construct and lower the step function for one cell.  Everything is
+    ShapeDtypeStructs — no array is ever allocated."""
+    tc_kw = {}
+    if opt_override:
+        tc_kw = {k[3:]: v for k, v in opt_override.items()
+                 if k.startswith("tc_")}
+        opt_override = {k: v for k, v in opt_override.items()
+                        if not k.startswith("tc_")}
+        if opt_override:
+            cfg = cfg.replace(**opt_override)
+    model = Model(cfg)
+    rules = sh.make_rules("train" if shape.kind == "train" else "serve",
+                          long_context=(shape.name == "long_500k"))
+    ctx = f"{cfg.name}/{shape.name}"
+
+    pspec = model.param_spec()
+    pshapes = P.shapes(pspec, cfg.param_dtype)
+    paxes = P.axes(pspec)
+    psh = _shardings_for(pshapes, paxes, mesh, rules, ctx)
+
+    ispecs, iaxes = input_specs(cfg, shape)
+    ish = _shardings_for(ispecs, iaxes, mesh, rules, ctx)
+    repl = NamedSharding(mesh, PartitionSpec())
+
+    with sh.activate(mesh, rules, ctx):
+        if shape.kind == "train":
+            tc = TrainConfig(**tc_kw)
+            step_fn, opt = make_train_step(model, tc)
+            ospec = opt.state_spec(pspec)
+            oshapes = P.shapes(ospec, "float32")
+            oaxes = P.axes(ospec)
+            osh = _shardings_for(oshapes, oaxes, mesh, rules, ctx)
+            step_shape = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(psh, osh, ish, repl),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(pshapes, oshapes, ispecs, step_shape)
+        else:
+            enc_len = ENC_LEN_FOR_DECODE if (cfg.is_encdec and
+                                             shape.is_decode) else (
+                shape.seq_len if cfg.is_encdec else 0)
+            cspec = model.cache_spec(shape.global_batch, shape.seq_len,
+                                     enc_len)
+            cshapes = P.shapes(cspec, cfg.compute_dtype)
+            caxes = P.axes(cspec)
+            csh = _shardings_for(cshapes, caxes, mesh, rules, ctx)
+            if shape.kind == "prefill":
+                step_fn = make_prefill_step(model)
+                jitted = jax.jit(step_fn, in_shardings=(psh, ish, csh),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(pshapes, ispecs, cshapes)
+            else:  # decode
+                step_fn = make_decode_step(model)
+                tok_sh = ish["tokens"]
+                tok_shape = ispecs["tokens"]
+                jitted = jax.jit(step_fn,
+                                 in_shardings=(psh, csh, tok_sh, repl),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(
+                    pshapes, cshapes, tok_shape,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+    return lowered
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opt_override: Optional[Dict[str, Any]] = None,
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+    }
+    if shape_name in cfg.skip_shapes:
+        result["status"] = "skip"
+        result["reason"] = "see DESIGN.md §Arch-applicability"
+        return result
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_lib.n_chips(mesh)
+    sh.clear_fallback_log()
+    t0 = time.time()
+    try:
+        lowered = build_lowering(cfg, shape, mesh, opt_override)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    except Exception as e:  # a failing cell is a bug in the system
+        result["status"] = "FAIL"
+        result["error"] = f"{type(e).__name__}: {e}"[:500]
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} ({result['mesh']}): "
+                  f"FAILED — {result['error']}", flush=True)
+        return result
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_cost = analyze(compiled.as_text(), chips)
+
+    result.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "chips": chips,
+        "xla_flops_per_device": float(cost.get("flops", -1.0)),
+        "hlo_flops_per_device": hlo_cost.flops,
+        "hlo_bytes_per_device": hlo_cost.bytes,
+        "coll_traffic_per_device": hlo_cost.coll_traffic,
+        "coll_breakdown": {k: v for k, v in sorted(
+            hlo_cost.coll_bytes.items(), key=lambda kv: -kv[1])[:12]},
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "sharding_fallbacks": sh.fallback_summary(),
+    })
+    # roofline terms (seconds) per device
+    result["terms"] = {
+        "compute_s": hlo_cost.flops / mesh_lib.PEAK_FLOPS_BF16,
+        "memory_s": hlo_cost.bytes / mesh_lib.HBM_BW,
+        "collective_s": hlo_cost.coll_traffic / mesh_lib.ICI_BW,
+    }
+    result["bottleneck"] = max(result["terms"], key=result["terms"].get)
+    if verbose:
+        t = result["terms"]
+        print(f"[dryrun] {arch} x {shape_name} ({result['mesh']}): OK "
+              f"compile={t_compile:.0f}s "
+              f"compute={t['compute_s']*1e3:.2f}ms "
+              f"memory={t['memory_s']*1e3:.2f}ms "
+              f"coll={t['collective_s']*1e3:.2f}ms "
+              f"-> {result['bottleneck']}", flush=True)
+        print(f"  memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+              f"out={mem.output_size_in_bytes/2**30:.2f}GiB (per device)",
+              flush=True)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=ALL_ARCHS)
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in LM_SHAPES])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) on both meshes")
+    ap.add_argument("--json", default=None, help="write results to file")
+    args = ap.parse_args(argv)
+
+    results = []
+    if args.all:
+        for arch in ALL_ARCHS:
+            for shape in LM_SHAPES:
+                for mp in (False, True):
+                    results.append(run_cell(arch, shape.name, mp))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+        for mp in meshes:
+            results.append(run_cell(args.arch, args.shape, mp))
+
+    n_fail = sum(1 for r in results if r.get("status") == "FAIL")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"[dryrun] wrote {len(results)} cells -> {args.json}")
+    print(f"[dryrun] done: {len(results)} cells, {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

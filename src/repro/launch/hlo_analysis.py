@@ -1,0 +1,464 @@
+"""HLO text analyzer for the dry-run roofline.
+
+XLA's ``compiled.cost_analysis()`` visits each while-loop body ONCE —
+with scan-over-layers everywhere, that undercounts a 61-layer model by
+61x.  This module parses ``compiled.as_text()`` (the post-SPMD,
+per-partition module), attributes per-computation costs through the call
+graph, and multiplies while bodies by their trip count (recovered from
+the loop-condition constant).
+
+Extracted per (arch x shape x mesh) cell:
+  * flops            — dot ops (2*M*N*K) + elementwise + reduces
+  * bytes            — operand+result bytes of top-level instructions
+                       (post-fusion: fusion internals are free, exactly
+                       the memory-traffic model of a fused device)
+  * collective bytes — per collective op kind, with ring-traffic factors
+                       and replica-group sizes
+All numbers are per-device (the module is one SPMD partition).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "logistic", "sign", "floor", "ceil", "cosine", "sine", "select",
+    "compare", "and", "or", "xor", "not", "clamp", "convert",
+}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes_elems(type_str: str) -> Tuple[int, int]:
+    """Bytes and element count for a type string (maybe a tuple type)."""
+    total_b = total_e = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_e += n
+        total_b += n * DTYPE_BYTES[dt]
+    # scalar like "f32[]" -> regex gives dims=""; handled (n=1).  Bare
+    # scalars written as "f32[]" are covered; "s32[]" too.
+    return total_b, total_e
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    args: str = ""          # raw text inside the op's parens
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symbols: Dict[str, str]        # instr name -> type string
+
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$")
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and "{" in line:
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        # operands: %names inside the top-level parens of rest
+        depth = 0
+        args_part = []
+        for ch in rest:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    break
+                depth -= 1
+            args_part.append(ch)
+        args_str = "".join(args_part)
+        operands = re.findall(r"%([\w\.\-_]+)", args_str)
+        attrs = rest[len(args_str):]
+        cur.instrs.append(Instr(name, type_str, opcode, operands, attrs,
+                                args_str))
+        cur.symbols[name] = type_str
+    return comps
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    out_b, out_e = _shape_bytes_elems(instr.type_str)
+    # contracted dims from the lhs operand shape
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+    if not m or not instr.operands:
+        return 2.0 * out_e            # fallback
+    lhs_type = comp.symbols.get(instr.operands[0], "")
+    shp = _SHAPE_RE.search(lhs_type)
+    if not shp:
+        return 2.0 * out_e
+    dims = [int(d) for d in shp.group(2).split(",") if d]
+    k = 1
+    for ci in (int(c) for c in m.group(1).split(",") if c):
+        if ci < len(dims):
+            k *= dims[ci]
+    return 2.0 * out_e * k
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _trip_count(cond: Computation) -> int:
+    """Heuristic: largest integer constant in the loop condition.
+
+    A lax.scan lowers to a while whose condition is
+    ``compare(induction_var, constant(T)), direction=LT`` — the trip
+    count is that constant."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode != "constant":
+            continue
+        # constants parse as: %c = s32[] constant(61)
+        m = re.search(r"(-?\d+)", ins.args)
+        if m:
+            best = max(best, int(m.group(1)))
+    return max(best, 1)
+
+
+_CALLED = re.compile(r"(?:calls|to_apply|body)=%?([\w\.\-_]+)")
+_COND = re.compile(r"condition=%?([\w\.\-_]+)")
+
+NO_TRAFFIC_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "iota", "after-all", "partition-id",
+                  "replica-id", "while", "conditional", "call"}
+
+# Ops whose traffic is NOT operands+result:
+#  dynamic-slice: reads only the sliced window (= result), not the
+#    operand — counting the full operand charges a 500k-entry KV cache
+#    for every decode step's 1-token slice (x4096 inflation).
+#  dynamic-update-slice / scatter: in-place read-modify-write of the
+#    update region (donated buffers alias in XLA): 2x update bytes.
+#  gather: result + index reads.
+WINDOW_OPS = {"dynamic-slice": "result",
+              "dynamic-update-slice": "update2",
+              "scatter": "update2",
+              "gather": "result",
+              "select-and-scatter": "update2"}
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_traffic: float = 0.0      # ring-model per-device traffic
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_traffic += other.coll_traffic * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+
+
+def _collective_traffic(kind: str, result_bytes: float, g: int) -> float:
+    """Per-device ring-model traffic for one collective."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if kind == "all-gather":
+        return result_bytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return result_bytes * (g - 1)
+    if kind == "all-to-all":
+        return result_bytes * (g - 1) / g
+    if kind == "collective-permute":
+        return result_bytes
+    return result_bytes
+
+
+class ModuleCost:
+    def __init__(self, text: str, n_partitions: int = 1):
+        self.comps = parse_module(text)
+        self.n_partitions = n_partitions
+        self._memo: Dict[str, Cost] = {}
+        self._fusion_param_bytes: Dict[str, List[Optional[float]]] = {}
+        entry = None
+        for name, c in self.comps.items():
+            if name.startswith("main") or entry is None:
+                if entry is None or name.startswith("main"):
+                    entry = name
+        self.entry = entry
+
+    def _param_window_bytes(self, comp_name: str) -> List[Optional[float]]:
+        """For a fused computation: per-parameter effective read bytes.
+
+        XLA fuses ``dynamic-slice``/``gather`` into consumers, so a scan
+        body's tiny fusion can name the whole carried xs array as an
+        operand while only touching one slice.  A parameter whose every
+        consumer is a slicing op is charged the slice results, not the
+        full array.  None = charge full operand bytes."""
+        if comp_name in self._fusion_param_bytes:
+            return self._fusion_param_bytes[comp_name]
+        comp = self.comps.get(comp_name)
+        out: List[Optional[float]] = []
+        if comp is None:
+            self._fusion_param_bytes[comp_name] = out
+            return out
+        params: Dict[str, int] = {}
+        for ins in comp.instrs:
+            if ins.opcode == "parameter":
+                m = re.search(r"(\d+)", ins.args)
+                if m:
+                    params[ins.name] = int(m.group(1))
+        n_params = (max(params.values()) + 1) if params else 0
+        out = [None] * n_params
+        sliced: Dict[str, float] = {}
+        full: set = set()
+        for ins in comp.instrs:
+            for op_name in ins.operands:
+                if op_name not in params:
+                    continue
+                if ins.opcode in ("dynamic-slice", "gather"):
+                    b, _ = _shape_bytes_elems(ins.type_str)
+                    sliced[op_name] = sliced.get(op_name, 0.0) + b
+                elif ins.opcode in ("dynamic-update-slice",):
+                    # in-place update: the buffer param is read only in
+                    # the update window (write side counted at the
+                    # fusion result)
+                    ub = 0
+                    if len(ins.operands) >= 2:
+                        ub, _ = _shape_bytes_elems(
+                            comp.symbols.get(ins.operands[1], ""))
+                    sliced[op_name] = sliced.get(op_name, 0.0) + ub
+                else:
+                    full.add(op_name)
+        for pname, idx in params.items():
+            if pname in sliced and pname not in full:
+                out[idx] = sliced[pname]
+        self._fusion_param_bytes[comp_name] = out
+        return out
+
+    def _fusion_write_bytes(self, comp_name: str, default: float) -> float:
+        """Write traffic of a fusion: a DUS-rooted fusion writes only the
+        update window of its (aliased, donated) buffer, not the whole
+        result shape."""
+        comp = self.comps.get(comp_name)
+        if comp is None or not comp.instrs:
+            return default
+        root = comp.instrs[-1]
+        if root.opcode == "dynamic-update-slice" and len(root.operands) >= 2:
+            ub, _ = _shape_bytes_elems(
+                comp.symbols.get(root.operands[1], ""))
+            if ub:
+                return float(ub)
+        return default
+
+    def cost(self) -> Cost:
+        return self._comp_cost(self.entry, top_level=True)
+
+    def _comp_cost(self, name: str, top_level: bool = False) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            return total
+        self._memo[name] = total  # provisional (cycles shouldn't occur)
+        for ins in comp.instrs:
+            opc = ins.opcode
+            if opc == "while":
+                body = _CALLED.search(ins.attrs)
+                cond = _COND.search(ins.attrs)
+                trips = 1
+                if cond and cond.group(1) in self.comps:
+                    trips = _trip_count(self.comps[cond.group(1)])
+                if body:
+                    total.add(self._comp_cost(body.group(1)), trips)
+                continue
+            if opc in ("fusion", "call", "async-start", "custom-call"):
+                called = _CALLED.search(ins.attrs)
+                if called:
+                    sub = self._comp_cost(called.group(1))
+                    # flops inside the fusion count; bytes are the fusion's
+                    # own operands/results (added below)
+                    total.flops += sub.flops
+                    total.coll_traffic += sub.coll_traffic
+                    for k, v in sub.coll_bytes.items():
+                        total.coll_bytes[k] = total.coll_bytes.get(k, 0) + v
+            if opc == "conditional":
+                for called in _CALLED.findall(ins.attrs):
+                    total.add(self._comp_cost(called), 1.0)
+            # ---- flops ------------------------------------------------
+            if opc == "dot":
+                total.flops += _dot_flops(ins, comp)
+            elif opc in ELEMENTWISE:
+                _, e = _shape_bytes_elems(ins.type_str)
+                total.flops += e
+            elif opc == "reduce":
+                for op_name in ins.operands[:1]:
+                    _, e = _shape_bytes_elems(comp.symbols.get(op_name, ""))
+                    total.flops += e
+            # ---- bytes (memory traffic model: post-fusion boundaries) --
+            if opc in WINDOW_OPS:
+                b, _ = _shape_bytes_elems(ins.type_str)
+                mode = WINDOW_OPS[opc]
+                if mode == "result":
+                    total.bytes += 2 * b          # read window + write result
+                else:  # update2: RMW of the update region
+                    ub = 0
+                    if len(ins.operands) >= 2:
+                        ub, _ = _shape_bytes_elems(
+                            comp.symbols.get(ins.operands[1], ""))
+                    total.bytes += 2 * max(ub, 1) if ub else 2 * b
+            elif opc == "fusion":
+                b, _ = _shape_bytes_elems(ins.type_str)
+                called = _CALLED.search(ins.attrs)
+                windows = (self._param_window_bytes(called.group(1))
+                           if called else [])
+                if called:
+                    b = min(b, self._fusion_write_bytes(called.group(1), b))
+                ob = 0.0
+                for i, op_name in enumerate(ins.operands):
+                    w = windows[i] if i < len(windows) else None
+                    if w is not None:
+                        ob += w
+                    else:
+                        o, _ = _shape_bytes_elems(
+                            comp.symbols.get(op_name, ""))
+                        ob += o
+                total.bytes += b + ob
+            elif opc not in NO_TRAFFIC_OPS:
+                b, _ = _shape_bytes_elems(ins.type_str)
+                ob = 0
+                for op_name in ins.operands:
+                    o, _ = _shape_bytes_elems(comp.symbols.get(op_name, ""))
+                    ob += o
+                total.bytes += b + ob
+            # ---- collectives -------------------------------------------
+            for coll in COLLECTIVES:
+                if opc == coll or opc == coll + "-start":
+                    rb, _ = _shape_bytes_elems(ins.type_str)
+                    g = _group_size(ins.attrs, self.n_partitions)
+                    key = f"{coll}(g={g})"
+                    total.coll_bytes[key] = total.coll_bytes.get(key, 0) + rb
+                    total.coll_traffic += _collective_traffic(coll, rb, g)
+        self._memo[name] = total
+        return total
+
+
+def analyze(text: str, n_partitions: int) -> Cost:
+    return ModuleCost(text, n_partitions).cost()
+
+
+def top_bytes(text: str, n_partitions: int, k: int = 20):
+    """Debug: top-k instructions by attributed bytes (incl. trip mult)."""
+    mc = ModuleCost(text, n_partitions)
+    mc.cost()                       # fill memo
+    # recompute per-instruction contributions with multipliers
+    mults: Dict[str, float] = {mc.entry: 1.0}
+    order = [mc.entry]
+    # propagate multipliers down the call graph (BFS)
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        comp = mc.comps.get(name)
+        if comp is None:
+            continue
+        m = mults[name]
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                body = _CALLED.search(ins.attrs)
+                cond = _COND.search(ins.attrs)
+                trips = _trip_count(mc.comps[cond.group(1)]) if cond and \
+                    cond.group(1) in mc.comps else 1
+                if body:
+                    mults[body.group(1)] = mults.get(body.group(1), 0) + m * trips
+                    order.append(body.group(1))
+            elif ins.opcode in ("call", "conditional"):
+                for called in _CALLED.findall(ins.attrs):
+                    mults[called] = mults.get(called, 0) + m
+                    order.append(called)
+    rows = []
+    for name, m in mults.items():
+        comp = mc.comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            opc = ins.opcode
+            b = 0.0
+            if opc in WINDOW_OPS:
+                rb, _ = _shape_bytes_elems(ins.type_str)
+                mode = WINDOW_OPS[opc]
+                if mode == "result":
+                    b = 2 * rb
+                else:
+                    ub = 0
+                    if len(ins.operands) >= 2:
+                        ub, _ = _shape_bytes_elems(
+                            comp.symbols.get(ins.operands[1], ""))
+                    b = 2 * max(ub, 1) if ub else 2 * rb
+            elif opc == "fusion":
+                rb, _ = _shape_bytes_elems(ins.type_str)
+                called = _CALLED.search(ins.attrs)
+                windows = (mc._param_window_bytes(called.group(1))
+                           if called else [])
+                if called:
+                    rb = min(rb, mc._fusion_write_bytes(called.group(1), rb))
+                ob = 0.0
+                for i, o in enumerate(ins.operands):
+                    w = windows[i] if i < len(windows) else None
+                    ob += w if w is not None else _shape_bytes_elems(
+                        comp.symbols.get(o, ""))[0]
+                b = rb + ob
+            elif opc not in NO_TRAFFIC_OPS and opc != "call":
+                rb, _ = _shape_bytes_elems(ins.type_str)
+                ob = sum(_shape_bytes_elems(comp.symbols.get(o, ""))[0]
+                         for o in ins.operands)
+                b = rb + ob
+            if b:
+                rows.append((b * m, f"{opc} {ins.type_str[:60]} x{m:.0f} "
+                             f"in {name[:40]}"))
+    rows.sort(key=lambda x: -x[0])
+    return rows[:k]

@@ -1,0 +1,81 @@
+"""Serving launcher: batched prefill + decode with the KV-cache runtime.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_ARCHS, get_config, get_smoke_config
+from repro.models.model import ENC_LEN_FOR_DECODE, Model
+from repro.train.step import make_decode_step, make_prefill_step
+
+
+def serve_batch(cfg, model, batch_size: int, prompt_len: int, gen: int,
+                seed: int = 0):
+    params = model.init_params(jax.random.key(seed))
+    prompts = jax.random.randint(jax.random.key(seed + 1),
+                                 (batch_size, prompt_len), 0, cfg.vocab)
+    enc_len = 16 if cfg.is_encdec else 0
+    cache = model.init_cache(jax.random.key(2), batch_size,
+                             prompt_len + gen, enc_len=enc_len)
+    pre = {"tokens": prompts}
+    if cfg.is_encdec:
+        pre["audio_embed"] = jax.random.normal(
+            jax.random.key(3), (batch_size, enc_len, cfg.d_model))
+    if cfg.vision_stub:
+        pre["vision_embed"] = jnp.zeros(
+            (batch_size, prompt_len, cfg.d_model))
+        pre["vision_mask"] = jnp.zeros((batch_size, prompt_len), jnp.int32)
+        pre["mrope_pos"] = jnp.broadcast_to(
+            jnp.arange(prompt_len, dtype=jnp.int32)[None, None],
+            (3, batch_size, prompt_len))
+    prefill = jax.jit(make_prefill_step(model))
+    decode = jax.jit(make_decode_step(model), donate_argnums=(1,))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, pre, cache)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(tok)
+    t_prefill = time.perf_counter() - t0
+
+    out = [tok]
+    t0 = time.perf_counter()
+    for t in range(gen - 1):
+        tok, cache = decode(params, cache, tok,
+                            jnp.asarray(prompt_len + t, jnp.int32))
+        out.append(tok)
+    jax.block_until_ready(out[-1])
+    t_decode = time.perf_counter() - t0
+    tokens = jnp.concatenate(out, axis=1)
+    return tokens, t_prefill, t_decode
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b", choices=ALL_ARCHS)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = Model(cfg)
+    tokens, t_p, t_d = serve_batch(cfg, model, args.batch, args.prompt_len,
+                                   args.gen)
+    n_tok = tokens.shape[0] * tokens.shape[1]
+    print(f"[serve] arch={args.arch} batch={args.batch} "
+          f"prefill={t_p*1e3:.1f}ms decode={t_d*1e3:.1f}ms "
+          f"({n_tok/(t_d+1e-9):.0f} tok/s)")
+    print(f"[serve] sample tokens: {tokens[0][:8].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

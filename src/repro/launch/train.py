@@ -1,0 +1,58 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+      --smoke --steps 100 --batch 8 --seq 128
+
+``--smoke`` selects the reduced config (runs on this container); without
+it the full config is used (sized for the production mesh — lower it via
+repro.launch.dryrun instead of running here)."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.common.config import TrainConfig
+from repro.configs import ALL_ARCHS, get_config, get_smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import Model
+from repro.parallel import sharding as sh
+from repro.train.loop import Trainer, lm_batch_iterator
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=ALL_ARCHS)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compression", default="none",
+                    choices=("none", "bf16"))
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tc = TrainConfig(steps=args.steps, learning_rate=args.lr,
+                     microbatches=args.microbatches,
+                     checkpoint_dir=args.ckpt_dir,
+                     checkpoint_every=args.ckpt_every,
+                     pod_grad_compression=args.compression)
+    mesh = make_host_mesh(data=len(jax.devices()))
+    model = Model(cfg)
+    trainer = Trainer(model, tc, mesh=mesh)
+    res = trainer.run(lm_batch_iterator(cfg, args.batch, args.seq))
+    print(f"[train] done: {res.steps_run} steps, "
+          f"loss {res.losses[0]:.4f} -> {res.final_loss:.4f}, "
+          f"{res.wall_s:.1f}s"
+          + (f" (resumed from {res.resumed_from})" if res.resumed_from
+             else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

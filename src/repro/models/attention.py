@@ -1,0 +1,484 @@
+"""Attention variants: GQA (full / sliding-window / bidirectional / cross),
+logit softcaps, qk-norm, RoPE / M-RoPE, MLA (DeepSeek) with absorbed decode,
+and KV caches (contiguous for global layers, ring for sliding-window
+layers, compressed-latent for MLA)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.layers import apply_mrope, apply_rope, rms_norm, softcap
+from repro.models.params import Spec
+from repro.parallel.sharding import constrain
+
+NEG_INF = -2.3819763e38  # large negative for bf16-safe masking
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def attn_spec(cfg: ModelConfig, kind: str = "global"):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    spec = {
+        "wq": Spec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": Spec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Spec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Spec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.use_qk_norm:
+        spec["q_norm"] = Spec((hd,), (None,), "zeros")
+        spec["k_norm"] = Spec((hd,), (None,), "zeros")
+    return spec
+
+
+def mla_spec(cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    spec = {
+        "wkv_a": Spec((d, kvr + dr), ("embed", "lora")),
+        "kv_norm": Spec((kvr,), (None,), "zeros"),
+        "wkv_b": Spec((kvr, h, dn + dv), ("lora", "heads", "head_dim")),
+        "wo": Spec((h, dv, d), ("heads", "head_dim", "embed")),
+    }
+    if qr:
+        spec["wq_a"] = Spec((d, qr), ("embed", "lora"))
+        spec["q_norm"] = Spec((qr,), (None,), "zeros")
+        spec["wq_b"] = Spec((qr, h, dn + dr), ("lora", "heads", "head_dim"))
+    else:
+        spec["wq"] = Spec((d, h, dn + dr), ("embed", "heads", "head_dim"))
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (per layer-kind)
+# ---------------------------------------------------------------------------
+
+def cache_entry_spec(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if kind == "mla":
+        return {
+            "ckv": Spec((batch, max_len, cfg.kv_lora_rank),
+                        ("batch", "cache_seq", None), "zeros"),
+            "kpe": Spec((batch, max_len, cfg.qk_rope_head_dim),
+                        ("batch", "cache_seq", None), "zeros"),
+        }
+    length = min(max_len, cfg.sliding_window) if kind == "local" else max_len
+    kv_dtype = "int8" if cfg.kv_cache_quant else None
+    spec = {
+        "k": Spec((batch, length, kv, hd),
+                  ("batch", "cache_seq", "kv_heads", "head_dim"), "zeros",
+                  dtype=kv_dtype),
+        "v": Spec((batch, length, kv, hd),
+                  ("batch", "cache_seq", "kv_heads", "head_dim"), "zeros",
+                  dtype=kv_dtype),
+        # absolute positions of each slot; -1 = empty (masks padding)
+        "pos": Spec((batch, length), ("batch", "cache_seq"), "zeros",
+                    dtype="int32"),
+    }
+    if cfg.kv_cache_quant:
+        # per-(slot, head) symmetric scales — the int8 KV cache halves
+        # the dominant decode memory term (beyond-paper optimization)
+        spec["k_scale"] = Spec((batch, length, kv),
+                               ("batch", "cache_seq", "kv_heads"), "zeros",
+                               dtype="float32")
+        spec["v_scale"] = Spec((batch, length, kv),
+                               ("batch", "cache_seq", "kv_heads"), "zeros",
+                               dtype="float32")
+    return spec
+
+
+def _quant_kv(x: jax.Array):
+    """(..., KV, D) -> int8 values + per-(.., KV) scale."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def _dequant_kv(q: jax.Array, scale: jax.Array, dtype):
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core dot-product attention (naive and chunked online-softmax)
+# ---------------------------------------------------------------------------
+
+def _build_mask(qpos, kpos, causal: bool, window: int) -> jax.Array:
+    """(.., S, T) boolean mask from absolute positions.
+
+    qpos: (B, S) or (S,);  kpos: (B, T) or (T,).  -1 in kpos = invalid slot.
+    """
+    q = qpos[..., :, None]
+    k = kpos[..., None, :]
+    mask = k >= 0
+    if causal:
+        mask &= k <= q
+    if window > 0:
+        mask &= k > q - window
+    return mask
+
+
+def _dot_attention(
+    q: jax.Array,            # (B, S, H, D)
+    k: jax.Array,            # (B, T, KV, D)
+    v: jax.Array,            # (B, T, KV, Dv)
+    mask: jax.Array,         # broadcastable to (B, 1, 1, S, T)
+    scale: float,
+    cap: float,
+    impl: str = "naive",
+    chunk: int = 1024,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qh = q.reshape(b, s, kvh, g, d)
+    while mask.ndim < 5:
+        mask = mask[:, None] if mask.ndim >= 2 else mask[None]
+    if impl == "chunked" and t > chunk and t % chunk == 0:
+        return _dot_attention_chunked(qh, k, v, mask, scale, cap, chunk
+                                      ).reshape(b, s, h, v.shape[-1])
+    scores = jnp.einsum("bsngd,btnd->bnsgt", qh, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cap)
+    # scores: (B, KV, S, G, T); mask: (B,1,1,S,T) -> align as (B,1,S,1,T).
+    mask_al = mask.transpose(0, 1, 3, 2, 4)
+    scores = jnp.where(mask_al, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnsgt,btnd->bsngd", probs, v)
+    return out.reshape(b, s, h, v.shape[-1])
+
+
+def _dot_attention_chunked(qh, k, v, mask, scale, cap, chunk):
+    """Online-softmax (flash-style) attention scanned over KV chunks.
+
+    qh: (B,S,KV,G,D); mask: (B,1,1,S,T).  Returns (B,S,KV,G,Dv).
+    Memory: O(S * chunk) scores instead of O(S * T).
+    """
+    b, s, kvh, g, d = qh.shape
+    t = k.shape[1]
+    dv = v.shape[-1]
+    n_chunks = t // chunk
+    kc = k.reshape(b, n_chunks, chunk, kvh, d)
+    vc = v.reshape(b, n_chunks, chunk, kvh, dv)
+    maskc = jnp.broadcast_to(mask, (b, 1, 1, s, t)).reshape(
+        b, 1, 1, s, n_chunks, chunk)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        kb, vb, mb = xs                              # (B,chunk,KV,D) ...
+        sc = jnp.einsum("bsngd,btnd->bnsgt", qh, kb,
+                        preferred_element_type=jnp.float32) * scale
+        sc = softcap(sc, cap)
+        # mb: (B,1,1,S,chunk) -> align to scores (B,KV,S,G,chunk)
+        mb_al = mb.transpose(0, 1, 3, 2, 4)           # (B,1,S,1,chunk)
+        sc = jnp.where(mb_al, sc, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m_run - m_new)
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bnsgt,btnd->bnsgd", p.astype(vb.dtype), vb)
+        acc = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kvh, s, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, s, g), jnp.float32)
+    acc0 = jnp.zeros((b, kvh, s, g, dv), v.dtype)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.moveaxis(maskc, 4, 0)))
+    out = acc / jnp.maximum(l_f, 1e-37)[..., None].astype(acc.dtype)
+    return out.transpose(0, 2, 1, 3, 4)               # (B,S,KV,G,Dv)
+
+
+def _sliding_attention_blocked(
+    q: jax.Array,            # (B, S, H, D)
+    k: jax.Array,            # (B, S, KV, D)
+    v: jax.Array,            # (B, S, KV, Dv)
+    qpos: jax.Array,         # (B, S)
+    window: int,
+    scale: float,
+    cap: float,
+    block_q: int = 2048,
+) -> jax.Array:
+    """Sliding-window attention in query blocks: block i attends only to
+    the KV slice [i*bq - window, i*bq + bq) — O(S * (window + bq)) compute
+    and score memory instead of O(S^2).  (attn_impl="blocked";
+    EXPERIMENTS.md §Perf cell 2.)"""
+    b, s, h, d = q.shape
+    bq = min(block_q, window, s)
+    while s % bq != 0:
+        bq //= 2
+    nb = s // bq
+    span = window + bq
+    kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+    pp = jnp.pad(qpos, ((0, 0), (window, 0)), constant_values=-1)
+
+    qb = jnp.moveaxis(q.reshape(b, nb, bq, h, d), 1, 0)          # (nb,B,bq,H,D)
+    qpb = jnp.moveaxis(qpos.reshape(b, nb, bq), 1, 0)
+
+    def body(_, xs):
+        i, qi, qpi = xs
+        kv_start = i * bq
+        ki = jax.lax.dynamic_slice(kp, (0, kv_start, 0, 0),
+                                   (b, span, k.shape[2], d))
+        vi = jax.lax.dynamic_slice(vp, (0, kv_start, 0, 0),
+                                   (b, span, v.shape[2], v.shape[-1]))
+        kpi = jax.lax.dynamic_slice(pp, (0, kv_start), (b, span))
+        mask = _build_mask(qpi, kpi, True, window)[:, None, None]
+        out = _dot_attention(qi, ki, vi, mask, scale, cap, "naive")
+        return 0, out
+
+    _, outs = jax.lax.scan(body, 0,
+                           (jnp.arange(nb), qb, qpb))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention (full-seq and cached-decode)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg, p, x, positions, theta, compute_dtype):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute_dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(compute_dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(compute_dtype))
+    if cfg.use_qk_norm:
+        q = rms_norm({"scale": p["q_norm"]}, q, cfg.norm_eps)
+        k = rms_norm({"scale": p["k_norm"]}, k, cfg.norm_eps)
+    if cfg.mrope_sections != (0, 0, 0) and positions.ndim == 3:
+        q = apply_mrope(q, positions, theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, theta, cfg.mrope_sections)
+    else:
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        q = apply_rope(q, pos2d, theta)
+        k = apply_rope(k, pos2d, theta)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def self_attention(
+    cfg: ModelConfig,
+    p,
+    x: jax.Array,                     # (B, S, d_model)
+    *,
+    kind: str,                        # "global" | "local" | "enc"
+    positions: jax.Array,             # (B,S) or (3,B,S) int32
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,   # scalar int32, decode position
+    compute_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Optional[dict]]:
+    theta = cfg.rope_theta
+    if kind == "global" and cfg.rope_theta_global:
+        theta = cfg.rope_theta_global
+    window = cfg.sliding_window if kind == "local" else 0
+    causal = kind != "enc"
+    hd = cfg.resolved_head_dim
+    scale = 1.0 / math.sqrt(hd)
+
+    q, k, v = _project_qkv(cfg, p, x, positions, theta, compute_dtype)
+    b, s = x.shape[0], x.shape[1]
+    pos2d = positions if positions.ndim == 2 else positions[0]
+
+    new_cache = None
+    use_blocked = (kind == "local" and cfg.attn_impl == "blocked"
+                   and s > window and s > 1)
+    if cache is None:
+        kpos = pos2d
+        mask = _build_mask(pos2d, kpos, causal, window)
+        k_att, v_att = k, v
+    elif s > 1:
+        # prefill: fill the cache.  Local (ring) caches keep the last
+        # ``window`` positions, *phase-aligned* so that subsequent decode
+        # steps (slot = pos % length) overwrite the oldest entry.
+        length = cache["k"].shape[1]
+        if s >= length:
+            k_w, v_w = k[:, -length:], v[:, -length:]
+            p_w = pos2d[:, -length:]
+            shift = s % length
+            k_w = jnp.roll(k_w, shift, axis=1)
+            v_w = jnp.roll(v_w, shift, axis=1)
+            p_w = jnp.roll(p_w, shift, axis=1)
+        else:
+            pad = length - s
+            k_w = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_w = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            p_w = jnp.pad(pos2d, ((0, 0), (0, pad)), constant_values=-1)
+        if cfg.kv_cache_quant:
+            kq, ks = _quant_kv(k_w)
+            vq, vs = _quant_kv(v_w)
+            new_cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs,
+                         "pos": p_w.astype(jnp.int32)}
+        else:
+            new_cache = {"k": k_w.astype(cache["k"].dtype),
+                         "v": v_w.astype(cache["v"].dtype),
+                         "pos": p_w.astype(jnp.int32)}
+        mask = _build_mask(pos2d, pos2d, causal, window)
+        k_att, v_att = k, v
+    else:
+        # decode: scatter the new KV into the cache ring.
+        length = cache["k"].shape[1]
+        slot = (cache_index % length).astype(jnp.int32)
+        if cfg.kv_cache_quant:
+            kq, ks = _quant_kv(k)
+            vq, vs = _quant_kv(v)
+            k_new = jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                 (0, slot, 0, 0))
+            v_new = jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                 (0, slot, 0, 0))
+            ks_new = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                                  (0, slot, 0))
+            vs_new = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                                  (0, slot, 0))
+            pos_new = jax.lax.dynamic_update_slice(
+                cache["pos"], pos2d.astype(jnp.int32), (0, slot))
+            new_cache = {"k": k_new, "v": v_new, "k_scale": ks_new,
+                         "v_scale": vs_new, "pos": pos_new}
+            k_att = _dequant_kv(k_new, ks_new, k.dtype)
+            v_att = _dequant_kv(v_new, vs_new, v.dtype)
+        else:
+            k_new = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+            v_new = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+            pos_new = jax.lax.dynamic_update_slice(
+                cache["pos"], pos2d.astype(jnp.int32), (0, slot))
+            new_cache = {"k": k_new, "v": v_new, "pos": pos_new}
+            new_cache["k"] = constrain(
+                new_cache["k"], "batch", "cache_seq", "kv_heads", "head_dim")
+            new_cache["v"] = constrain(
+                new_cache["v"], "batch", "cache_seq", "kv_heads", "head_dim")
+            k_att, v_att = new_cache["k"], new_cache["v"]
+        mask = _build_mask(pos2d, pos_new, causal, window)
+
+    if use_blocked and k_att is k:
+        # O(S * (window + block)) sliding attention for full-seq local
+        # layers (train/prefill); the cache write above is unaffected.
+        out = _sliding_attention_blocked(q, k, v, pos2d, window, scale,
+                                         cfg.attn_softcap)
+    else:
+        mask = mask[:, None, None] if mask.ndim == 3 \
+            else mask[None, None, None]
+        out = _dot_attention(q, k_att, v_att, mask, scale, cfg.attn_softcap,
+                             "naive" if cfg.attn_impl == "blocked"
+                             else cfg.attn_impl, cfg.attn_chunk)
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute_dtype))
+    return constrain(y, "batch", "seq", "d_model"), new_cache
+
+
+def cross_attention(
+    cfg: ModelConfig, p, x: jax.Array, kv_src: jax.Array,
+    compute_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Encoder-decoder cross attention (no positions, no mask)."""
+    hd = cfg.resolved_head_dim
+    scale = 1.0 / math.sqrt(hd)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute_dtype))
+    k = jnp.einsum("btd,dhk->bthk", kv_src, p["wk"].astype(compute_dtype))
+    v = jnp.einsum("btd,dhk->bthk", kv_src, p["wv"].astype(compute_dtype))
+    mask = jnp.ones((1, 1, 1, x.shape[1], kv_src.shape[1]), bool)
+    out = _dot_attention(q, k, v, mask, scale, 0.0, cfg.attn_impl,
+                         cfg.attn_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute_dtype))
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek V2/V3)
+# ---------------------------------------------------------------------------
+
+def _mla_queries(cfg, p, x, pos2d, compute_dtype):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(compute_dtype))
+        cq = rms_norm({"scale": p["q_norm"]}, cq, cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(compute_dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute_dtype))
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, pos2d, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def mla_attention(
+    cfg: ModelConfig, p, x: jax.Array, *,
+    positions: jax.Array,
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    compute_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Optional[dict]]:
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr, h = cfg.kv_lora_rank, cfg.n_heads
+    scale = 1.0 / math.sqrt(dn + dr)
+    b, s, _ = x.shape
+    pos2d = positions if positions.ndim == 2 else positions[0]
+
+    q_nope, q_pe = _mla_queries(cfg, p, x, pos2d, compute_dtype)
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(compute_dtype))
+    ckv, k_pe = ckv_full[..., :kvr], ckv_full[..., kvr:]
+    ckv = rms_norm({"scale": p["kv_norm"]}, ckv, cfg.norm_eps)
+    k_pe = apply_rope(k_pe[:, :, None, :], pos2d, cfg.rope_theta)[:, :, 0, :]
+
+    wkv_b = p["wkv_b"].astype(compute_dtype)      # (kvr, H, dn+dv)
+    wk_b, wv_b = wkv_b[..., :dn], wkv_b[..., dn:]
+
+    if cache is not None and s == 1:
+        # ---- absorbed decode on the compressed latent cache --------------
+        length = cache["ckv"].shape[1]
+        ckv_new = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, cache_index, 0))
+        kpe_new = jax.lax.dynamic_update_slice(
+            cache["kpe"], k_pe.astype(cache["kpe"].dtype), (0, cache_index, 0))
+        ckv_new = constrain(ckv_new, "batch", "cache_seq", None)
+        kpe_new = constrain(kpe_new, "batch", "cache_seq", None)
+        new_cache = {"ckv": ckv_new, "kpe": kpe_new}
+        # absorb wk_b into the query:  (B,1,H,dn) x (kvr,H,dn) -> (B,1,H,kvr)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, wk_b)
+        sc = (jnp.einsum("bshr,btr->bhst", q_lat,
+                         ckv_new.astype(compute_dtype),
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bhst", q_pe,
+                           kpe_new.astype(compute_dtype),
+                           preferred_element_type=jnp.float32)) * scale
+        tpos = jnp.arange(length)[None, :]
+        valid = tpos <= cache_index
+        sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+        probs = jax.nn.softmax(sc, axis=-1).astype(compute_dtype)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", probs,
+                             ckv_new.astype(compute_dtype))
+        out = jnp.einsum("bshr,rhv->bshv", ctx_lat, wv_b)
+    else:
+        # ---- train / prefill: expand latents, standard attention ---------
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, wk_b)
+        val = jnp.einsum("bsr,rhv->bshv", ckv, wv_b)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, s, h, dr))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        q = constrain(q, "batch", "seq", "heads", "head_dim")
+        k = constrain(k, "batch", "seq", "heads", "head_dim")
+        mask = _build_mask(pos2d, pos2d, True, 0)[:, None, None]
+        out = _dot_attention(q, k, val, mask, scale, 0.0, cfg.attn_impl,
+                             cfg.attn_chunk)
+        new_cache = None
+        if cache is not None:
+            length = cache["ckv"].shape[1]
+            pad = length - s
+            ckv_w = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
+            kpe_w = jnp.pad(k_pe, ((0, 0), (0, pad), (0, 0)))
+            new_cache = {"ckv": ckv_w.astype(cache["ckv"].dtype),
+                         "kpe": kpe_w.astype(cache["kpe"].dtype)}
+
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"].astype(compute_dtype))
+    return constrain(y, "batch", "seq", "d_model"), new_cache

@@ -1,0 +1,180 @@
+"""Common neural-net layers (functional, params = nested dicts of arrays)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Spec
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm_spec(dim: int):
+    return {"scale": Spec((dim,), (None,), "zeros")}  # gemma-style (1+scale)
+
+
+def rms_norm(params, x: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm_spec(dim: int):
+    return {
+        "scale": Spec((dim,), (None,), "ones"),
+        "bias": Spec((dim,), (None,), "zeros"),
+    }
+
+
+def layer_norm(params, x: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations / softcap
+# ---------------------------------------------------------------------------
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def geglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.gelu(gate, approximate=True) * up
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head
+# ---------------------------------------------------------------------------
+
+def embedding_spec(vocab: int, d_model: int):
+    return {"table": Spec((vocab, d_model), ("vocab", "embed"), "embed")}
+
+
+def embed(params, tokens: jax.Array, compute_dtype) -> jax.Array:
+    table = params["table"].astype(compute_dtype)
+    y = jnp.take(table, tokens, axis=0)
+    return constrain(y, "batch", "seq", "d_model")
+
+
+def unembed(params, x: jax.Array, compute_dtype) -> jax.Array:
+    """Tied LM head: logits = x @ table.T, vocab sharded over model."""
+    table = params["table"].astype(compute_dtype)
+    logits = jnp.einsum("...d,vd->...v", x, table)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Dense projections
+# ---------------------------------------------------------------------------
+
+def linear_spec(d_in: int, d_out: int, axes=("embed", "d_ff"), bias: bool = False):
+    spec = {"w": Spec((d_in, d_out), axes)}
+    if bias:
+        spec["b"] = Spec((d_out,), (axes[1],), "zeros")
+    return spec
+
+
+def linear(params, x: jax.Array, compute_dtype) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, params["w"].astype(compute_dtype))
+    if "b" in params:
+        y = y + params["b"].astype(compute_dtype)
+    return y
+
+
+def ffn_spec(d_model: int, d_ff: int, gated: bool = True, bias: bool = False):
+    spec = {
+        "w_up": Spec((d_model, d_ff), ("embed", "d_ff")),
+        "w_down": Spec((d_ff, d_model), ("d_ff", "embed")),
+    }
+    if gated:
+        spec["w_gate"] = Spec((d_model, d_ff), ("embed", "d_ff"))
+    if bias:
+        spec["b_up"] = Spec((d_ff,), ("d_ff",), "zeros")
+        spec["b_down"] = Spec((d_model,), (None,), "zeros")
+    return spec
+
+
+def ffn(params, x: jax.Array, compute_dtype, act: str = "silu") -> jax.Array:
+    up = jnp.einsum("...d,df->...f", x, params["w_up"].astype(compute_dtype))
+    if "b_up" in params:
+        up = up + params["b_up"].astype(compute_dtype)
+    if "w_gate" in params:
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(compute_dtype))
+        h = swiglu(gate, up) if act == "silu" else geglu(gate, up)
+    else:
+        h = jax.nn.gelu(up, approximate=True) if act == "gelu" else jax.nn.silu(up)
+    h = constrain(h, "batch", "seq", "d_ff")
+    y = jnp.einsum("...f,fd->...d", h, params["w_down"].astype(compute_dtype))
+    if "b_down" in params:
+        y = y + params["b_down"].astype(compute_dtype)
+    return constrain(y, "batch", "seq", "d_model")
+
+
+# ---------------------------------------------------------------------------
+# RoPE (incl. per-layer-type theta and Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jax.Array,                 # (B, S, H, D)
+    positions: jax.Array,         # (B, S) int32
+    theta: float,
+) -> jax.Array:
+    freqs = rope_freqs(x.shape[-1], theta)                      # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,                 # (B, S, H, D)
+    positions: jax.Array,         # (3, B, S) int32  — (t, h, w)
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: frequency bands split into (t, h, w)
+    sections; each band rotates by its own position stream."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)                      # (half,)
+    # Build per-band position source: (B, S, half)
+    splits = jnp.concatenate([
+        jnp.full((sections[0],), 0, jnp.int32),
+        jnp.full((sections[1],), 1, jnp.int32),
+        jnp.full((sections[2],), 2, jnp.int32),
+    ])
+    pos = positions.astype(jnp.float32)                         # (3, B, S)
+    pos_bsh = jnp.take(pos, splits, axis=0)                     # (half, B, S)
+    pos_bsh = jnp.moveaxis(pos_bsh, 0, -1)                      # (B, S, half)
+    ang = pos_bsh * freqs                                       # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,279 @@
+"""Unified Model API: one class serving every assigned architecture.
+
+Exposes exactly the entry points the launcher lowers:
+  * ``loss(params, batch)``            -> train_4k
+  * ``prefill(params, batch)``         -> prefill_32k
+  * ``decode_step(params, cache, ...)``-> decode_32k / long_500k
+plus spec trees (params / cache / inputs) so the multi-pod dry-run never
+allocates real arrays for the full-size configs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, ShapeConfig
+from repro.models import params as P
+from repro.models import transformer as T
+from repro.models.layers import embed, embedding_spec, rms_norm, softcap, unembed
+from repro.models.params import Spec
+from repro.parallel.sharding import constrain
+
+
+def softmax_xent(logits: jax.Array, targets: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean cross-entropy in fp32; targets < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    valid = targets >= 0
+    if mask is not None:
+        valid = valid & (mask > 0)
+    t = jnp.clip(targets, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ specs
+    def param_spec(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        spec: Dict[str, Any] = {"embed": embedding_spec(cfg.vocab, cfg.d_model)}
+        cross = cfg.is_encdec
+        spec["decoder"] = T.decoder_spec(cfg, cross=cross)
+        spec["final_norm"] = T._norm_spec(cfg)
+        if cfg.is_encdec:
+            spec["encoder"] = T.encoder_spec(cfg)
+        if cfg.vision_stub:
+            spec["vision_proj"] = {
+                "w": Spec((cfg.d_model, cfg.d_model), ("embed", None))}
+        if not cfg.tie_embeddings:
+            spec["lm_head"] = {
+                "w": Spec((cfg.d_model, cfg.vocab), ("embed", "vocab"))}
+        if cfg.mtp:
+            spec["mtp"] = {
+                "proj": {"w": Spec((2 * cfg.d_model, cfg.d_model),
+                                   ("embed", None))},
+                "block": T.block_spec(
+                    cfg, "mla" if cfg.use_mla else "global",
+                    "dense_first" if cfg.dense_d_ff else "dense"),
+                "norm": T._norm_spec(cfg),
+            }
+        return spec
+
+    def param_shapes(self):
+        return P.shapes(self.param_spec(), self.cfg.param_dtype)
+
+    def param_axes(self):
+        return P.axes(self.param_spec())
+
+    def init_params(self, key):
+        return P.init(self.param_spec(), key, self.cfg.param_dtype)
+
+    def cache_spec(self, batch: int, max_len: int, enc_len: int = 0):
+        cross_len = enc_len if self.cfg.is_encdec else 0
+        return T.decoder_cache_spec(self.cfg, batch, max_len, cross_len)
+
+    def cache_shapes(self, batch: int, max_len: int, enc_len: int = 0):
+        return P.shapes(self.cache_spec(batch, max_len, enc_len),
+                        self.cfg.compute_dtype)
+
+    def init_cache(self, key, batch: int, max_len: int, enc_len: int = 0):
+        cache = P.init(self.cache_spec(batch, max_len, enc_len), key,
+                       self.cfg.compute_dtype)
+        # empty attention-cache slots must be masked out: pos = -1
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: jnp.full_like(x, -1)
+            if (p and getattr(p[-1], "key", None) == "pos") else x, cache)
+
+    # -------------------------------------------------------------- embedding
+    def _embed_inputs(self, params, batch, compute_dtype):
+        cfg = self.cfg
+        x = embed(params["embed"], batch["tokens"], compute_dtype)
+        if cfg.scale_embed:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+        if cfg.vision_stub and "vision_embed" in batch:
+            v = jnp.einsum("bsd,de->bse",
+                           batch["vision_embed"].astype(compute_dtype),
+                           params["vision_proj"]["w"].astype(compute_dtype))
+            m = batch["vision_mask"][..., None].astype(compute_dtype)
+            x = x * (1 - m) + v * m
+        if cfg.pos_embed == "sinusoidal":
+            s = x.shape[1]
+            x = x + T.sinusoidal_positions(s, cfg.d_model, x.dtype)[None]
+        return constrain(x, "batch", "seq", "d_model")
+
+    def _positions(self, batch, seq: int):
+        cfg = self.cfg
+        if cfg.mrope_sections != (0, 0, 0) and "mrope_pos" in batch:
+            return batch["mrope_pos"]
+        b = batch["tokens"].shape[0]
+        return jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None], (b, seq))
+
+    def _encode(self, params, batch, train, compute_dtype):
+        cfg = self.cfg
+        ae = batch["audio_embed"].astype(compute_dtype)
+        s = ae.shape[1]
+        enc_in = ae + T.sinusoidal_positions(s, cfg.d_model, ae.dtype)[None]
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                               (ae.shape[0], s))
+        return T.apply_encoder(cfg, params["encoder"], enc_in, pos,
+                               train=train, compute_dtype=compute_dtype)
+
+    def _lm_logits(self, params, x, compute_dtype):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            logits = unembed(params["embed"], x, compute_dtype)
+        else:
+            logits = jnp.einsum("...d,dv->...v", x,
+                                params["lm_head"]["w"].astype(compute_dtype))
+            logits = constrain(logits, "batch", "seq", "vocab")
+        return softcap(logits, cfg.final_softcap)
+
+    # ------------------------------------------------------------------ train
+    def forward(self, params, batch, train: bool = True):
+        """Full-sequence forward -> (logits, aux, load)."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = self._embed_inputs(params, batch, cd)
+        seq = x.shape[1]
+        positions = self._positions(batch, seq)
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = self._encode(params, batch, train, cd)
+        x, _, (aux, load) = T.apply_decoder(
+            cfg, params["decoder"], x, positions=positions, enc_out=enc_out,
+            train=train, compute_dtype=cd)
+        x = T._norm(cfg, params["final_norm"], x)
+        return self._lm_logits(params, x, cd), aux, load, x
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        logits, aux, load, h_final = self.forward(params, batch, train=True)
+        loss = softmax_xent(logits, batch["targets"])
+        metrics = {"xent": loss, "aux": aux, "expert_load": load}
+        if cfg.mtp:
+            loss_mtp = self._mtp_loss(params, batch, h_final)
+            metrics["mtp"] = loss_mtp
+            loss = loss + 0.3 * loss_mtp
+        loss = loss + aux
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def _mtp_loss(self, params, batch, h_final):
+        """DeepSeek-V3 multi-token prediction: predict t+2 from
+        [h_t ; emb(token_{t+1})] through one extra block."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        tok_next = batch["targets"]                       # token at t+1
+        emb_next = embed(params["embed"], jnp.clip(tok_next, 0), cd)
+        h = jnp.concatenate([h_final, emb_next], axis=-1)
+        h = jnp.einsum("bsd,de->bse", h,
+                       params["mtp"]["proj"]["w"].astype(cd))
+        seq = h.shape[1]
+        positions = self._positions(batch, seq)
+        h, _, _ = T.apply_block(
+            cfg, "mla" if cfg.use_mla else "global",
+            "dense_first" if cfg.dense_d_ff else "dense",
+            params["mtp"]["block"], h, positions=positions,
+            compute_dtype=cd)
+        h = T._norm(cfg, params["mtp"]["norm"], h)
+        logits = self._lm_logits(params, h, cd)
+        # target at t+2 == targets shifted left by one; last position invalid
+        t2 = jnp.concatenate(
+            [batch["targets"][:, 1:],
+             jnp.full_like(batch["targets"][:, :1], -1)], axis=1)
+        return softmax_xent(logits, t2)
+
+    # ---------------------------------------------------------------- serving
+    def prefill(self, params, batch, cache):
+        """Process the prompt, fill the cache, return last-token logits."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = self._embed_inputs(params, batch, cd)
+        seq = x.shape[1]
+        positions = self._positions(batch, seq)
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = self._encode(params, batch, False, cd)
+        x, new_cache, _ = T.apply_decoder(
+            cfg, params["decoder"], x, positions=positions, cache=cache,
+            cache_index=jnp.asarray(0, jnp.int32), enc_out=enc_out,
+            train=False, compute_dtype=cd)
+        x = T._norm(cfg, params["final_norm"], x[:, -1:])
+        return self._lm_logits(params, x, cd), new_cache
+
+    def decode_step(self, params, cache, tokens, index):
+        """One token for every sequence in the batch.
+
+        tokens: (B, 1) int32; index: scalar int32 current position."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        batch = {"tokens": tokens}
+        x = embed(params["embed"], tokens, cd)
+        if cfg.scale_embed:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, cd)
+        if cfg.pos_embed == "sinusoidal":
+            pe = T.sinusoidal_at(index, cfg.d_model, x.dtype)
+            x = x + pe[None, None, :]
+        b = tokens.shape[0]
+        if cfg.mrope_sections != (0, 0, 0):
+            pos = jnp.broadcast_to(index.astype(jnp.int32), (3, b, 1))
+        else:
+            pos = jnp.broadcast_to(index.astype(jnp.int32), (b, 1))
+        x, new_cache, _ = T.apply_decoder(
+            cfg, params["decoder"], x, positions=pos, cache=cache,
+            cache_index=index, train=False, compute_dtype=cd)
+        x = T._norm(cfg, params["final_norm"], x)
+        return self._lm_logits(params, x, cd), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch x shape) — ShapeDtypeStructs + logical axes
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Returns (tree of ShapeDtypeStruct, tree of logical-axes tuples)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+
+    def add(name, shp, ax, dtype=i32):
+        specs[name] = jax.ShapeDtypeStruct(shp, dtype)
+        axes[name] = ax
+
+    if shape.kind == "train":
+        add("tokens", (b, s), ("batch", "seq"))
+        add("targets", (b, s), ("batch", "seq"))
+        if cfg.is_encdec:
+            add("audio_embed", (b, s, cfg.d_model),
+                ("batch", "seq", "d_model"), jnp.dtype(cfg.compute_dtype))
+        if cfg.vision_stub:
+            add("vision_embed", (b, s, cfg.d_model),
+                ("batch", "seq", "d_model"), jnp.dtype(cfg.compute_dtype))
+            add("vision_mask", (b, s), ("batch", "seq"))
+            add("mrope_pos", (3, b, s), (None, "batch", "seq"))
+    elif shape.kind == "prefill":
+        add("tokens", (b, s), ("batch", "seq"))
+        if cfg.is_encdec:
+            add("audio_embed", (b, s, cfg.d_model),
+                ("batch", "seq", "d_model"), jnp.dtype(cfg.compute_dtype))
+        if cfg.vision_stub:
+            add("vision_embed", (b, s, cfg.d_model),
+                ("batch", "seq", "d_model"), jnp.dtype(cfg.compute_dtype))
+            add("vision_mask", (b, s), ("batch", "seq"))
+            add("mrope_pos", (3, b, s), (None, "batch", "seq"))
+    else:  # decode
+        add("tokens", (b, 1), ("batch", None))
+        if cfg.vision_stub:
+            add("mrope_pos", (3, b, 1), (None, "batch", None))
+    return specs, axes
+
+
+ENC_LEN_FOR_DECODE = 1504  # whisper: 30 s of audio -> ~1500 frames (padded)

@@ -1,0 +1,123 @@
+"""Parameter specification trees.
+
+Every module declares its parameters as a nested dict of ``Spec`` entries
+(shape + logical axes + initializer).  From one spec tree we derive:
+
+  * real parameters          (``init`` — used by smoke tests / examples)
+  * ShapeDtypeStruct stand-ins (``shapes`` — used by the multi-pod dry-run,
+    no device allocation ever happens for the full-size configs)
+  * logical-axes tree        (``axes`` — resolved to NamedShardings)
+
+Keeping these three views in lockstep from a single source is what lets
+the dry-run lower 671B-parameter configs on a CPU container.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Spec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "fan_in"      # fan_in | zeros | ones | normal | embed
+    dtype: Optional[str] = None
+
+    def __post_init__(self):  # pragma: no cover - NamedTuple has no post_init
+        pass
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def _leafs(tree):
+    return jax.tree.leaves(tree, is_leaf=is_spec)
+
+
+def validate(tree):
+    for leaf in _leafs(tree):
+        assert isinstance(leaf, Spec), f"non-Spec leaf {leaf!r}"
+        assert len(leaf.shape) == len(leaf.axes), leaf
+
+
+def stack(tree, n: int, axis_name: str = "layers"):
+    """Prepend a stacking dim of size ``n`` (for scan-over-layers)."""
+    return jax.tree.map(
+        lambda s: Spec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.dtype),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def shapes(tree, param_dtype: str):
+    """ShapeDtypeStruct tree — the dry-run's zero-allocation params."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or param_dtype)),
+        tree,
+        is_leaf=is_spec,
+    )
+
+
+def axes(tree):
+    return jax.tree.map(lambda s: s.axes, tree, is_leaf=is_spec)
+
+
+def _init_one(spec: Spec, key, param_dtype: str):
+    dtype = jnp.dtype(spec.dtype or param_dtype)
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "normal":
+        return (0.02 * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    if spec.init == "embed":
+        return (0.02 * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    if spec.init == "fan_in":
+        # Axes-aware fan-in: leading batch-like dims (scan stacking,
+        # expert dims) do NOT contribute to fan-in; the output side is
+        # the trailing head block, or everything-but-input when the last
+        # axis is "embed" (projections back into the residual stream).
+        core_shape, core_axes = [], []
+        for d, a in zip(shape, spec.axes):
+            if a in ("layers", "expert", "expert2d") and not core_shape:
+                continue            # leading stacked/expert dim
+            core_shape.append(d)
+            core_axes.append(a)
+        if not core_shape:
+            core_shape, core_axes = list(shape), list(spec.axes)
+        if len(core_shape) == 1:
+            fan_in = core_shape[0]
+        elif core_axes and core_axes[-1] == "embed":
+            fan_in = int(np.prod(core_shape[:-1]))
+        elif len(core_shape) >= 3:
+            fan_in = int(np.prod(core_shape[:-2]))
+        else:
+            fan_in = core_shape[0]
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init(tree, key, param_dtype: str):
+    """Materialize real parameters (smoke tests / examples only)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(s, k, param_dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in _leafs(tree))
+
+
+def param_bytes(tree, param_dtype: str) -> int:
+    total = 0
+    for s in _leafs(tree):
+        total += int(np.prod(s.shape)) * jnp.dtype(s.dtype or param_dtype).itemsize
+    return total

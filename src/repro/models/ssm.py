@@ -1,0 +1,424 @@
+"""Recurrent sequence mixers: xLSTM (mLSTM + sLSTM) and Griffin RG-LRU.
+
+mLSTM   — matrix-memory LSTM [arXiv:2405.04517], implemented in the
+          chunkwise-parallel stabilized form (intra-chunk quadratic +
+          inter-chunk recurrent state), O(S * chunk) memory; plus an O(1)
+          recurrent step for decode.
+sLSTM   — scalar-memory LSTM with exponential gating and a normalizer
+          state; inherently sequential -> lax.scan over time.
+RG-LRU  — real-gated linear recurrent unit [Griffin, arXiv:2402.19427];
+          parallel via lax.associative_scan, O(1) decode step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models.params import Spec
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (width w) — shift-and-add form, shard-friendly
+# ---------------------------------------------------------------------------
+
+def conv1d_spec(width: int, dim: int):
+    return {"w": Spec((width, dim), (None, "d_ff")),
+            "b": Spec((dim,), ("d_ff",), "zeros")}
+
+
+def causal_conv1d(params, x: jax.Array, state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """x: (B, S, D). state: (B, w-1, D) trailing inputs from the past."""
+    w = params["w"].shape[0]
+    wts = params["w"].astype(x.dtype)
+    if state is not None:
+        xin = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    else:
+        xin = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    s = x.shape[1]
+    y = jnp.zeros_like(x)
+    for j in range(w):
+        y = y + xin[:, j:j + s, :] * wts[w - 1 - j][None, None, :]
+    y = y + params["b"].astype(x.dtype)
+    new_state = xin[:, -(w - 1):, :] if state is not None else None
+    return y, new_state
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def mlstm_block_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    inner = 2 * d                       # projection factor 2 (xLSTM paper)
+    nh = cfg.n_heads
+    return {
+        "w_up": Spec((d, 2 * inner), ("embed", "d_ff")),
+        "conv": conv1d_spec(cfg.conv_width, inner),
+        "wq": Spec((inner, inner), ("d_ff", None)),
+        "wk": Spec((inner, inner), ("d_ff", None)),
+        "wv": Spec((inner, inner), ("d_ff", None)),
+        "w_if": Spec((inner, 2 * nh), ("d_ff", None)),
+        "b_if": Spec((2 * nh,), (None,), "zeros"),
+        "gn_scale": Spec((inner,), (None,), "ones"),
+        "w_down": Spec((inner, d), ("d_ff", "embed")),
+    }
+
+
+def _mlstm_chunkwise(q, k, v, ig, fg, chunk: int, state=None):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B, H, S, dh); ig, fg: (B, H, S) gate pre-activations.
+    state: optional (C, n, m) = ((B,H,dh,dh), (B,H,dh), (B,H)).
+    Returns h: (B,H,S,dh) and final state.
+    """
+    b, h, s, dh = q.shape
+    q = q * (1.0 / math.sqrt(dh))
+    if s % chunk != 0:
+        chunk = s                                  # single chunk fallback
+    nc = s // chunk
+    qc = q.reshape(b, h, nc, chunk, dh).astype(jnp.float32)
+    kc = k.reshape(b, h, nc, chunk, dh).astype(jnp.float32)
+    vc = v.reshape(b, h, nc, chunk, dh).astype(jnp.float32)
+    igc = ig.reshape(b, h, nc, chunk).astype(jnp.float32)
+    fgc = fg.reshape(b, h, nc, chunk).astype(jnp.float32)
+
+    if state is None:
+        C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        # with C0 = n0 = 0 the initial stabilizer value is mathematically
+        # irrelevant; 0 avoids extreme exponents (-1e30 leaks NaNs into
+        # XLA-fused exp chains under jit — verified empirically)
+        m0 = jnp.zeros((b, h), jnp.float32)
+    else:
+        C0, n0, m0 = [x.astype(jnp.float32) for x in state]
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, xs):
+        C, n, m = carry
+        qb, kb, vb, ib, fb = xs                   # (B,H,L,...)
+        logf = jax.nn.log_sigmoid(fb)             # (B,H,L)
+        bcum = jnp.cumsum(logf, axis=-1)          # inclusive
+        btot = bcum[..., -1]
+        # stabilizers per query position t
+        a = ib - bcum                             # i_s - b_s
+        m_intra = bcum + jnp.max(jnp.where(
+            tri, a[..., None, :], -60.0), axis=-1)        # (B,H,L)
+        m_inter = bcum + m[..., None]
+        m_t = jnp.maximum(m_intra, m_inter)
+        # intra-chunk scores
+        dmat = bcum[..., :, None] - bcum[..., None, :] + ib[..., None, :]
+        dmat = jnp.where(tri, dmat - m_t[..., :, None], -60.0)
+        smat = jnp.einsum("bhtd,bhsd->bhts", qb, kb) * jnp.exp(dmat)
+        # inter-chunk
+        scale_in = jnp.exp(bcum + m[..., None] - m_t)      # (B,H,L)
+        h_inter = jnp.einsum("bhtd,bhde->bhte", qb, C) * scale_in[..., None]
+        n_inter = jnp.einsum("bhtd,bhd->bht", qb, n) * scale_in
+        num = h_inter + jnp.einsum("bhts,bhse->bhte", smat, vb)
+        den = n_inter + jnp.sum(smat, axis=-1)
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # state update to end of chunk
+        m_next = jnp.maximum(m + btot,
+                             jnp.max(ib + btot[..., None] - bcum, axis=-1))
+        kv_scale = jnp.exp(ib + btot[..., None] - bcum - m_next[..., None])
+        C_next = (C * jnp.exp(m + btot - m_next)[..., None, None]
+                  + jnp.einsum("bhs,bhsd,bhse->bhde", kv_scale, kb, vb))
+        n_next = (n * jnp.exp(m + btot - m_next)[..., None]
+                  + jnp.einsum("bhs,bhsd->bhd", kv_scale, kb))
+        return (C_next, n_next, m_next), hout
+
+    (Cf, nf, mf), hs = jax.lax.scan(
+        body, (C0, n0, m0),
+        tuple(jnp.moveaxis(x, 2, 0) for x in (qc, kc, vc, igc, fgc)))
+    hs = jnp.moveaxis(hs, 0, 2).reshape(b, h, s, dh)
+    return hs.astype(v.dtype), (Cf, nf, mf)
+
+
+def _mlstm_step(q, k, v, ig, fg, state):
+    """O(1) recurrent decode step. q,k,v: (B,H,dh); ig,fg: (B,H)."""
+    C, n, m = state
+    dh = q.shape[-1]
+    q = q.astype(jnp.float32) * (1.0 / math.sqrt(dh))
+    k, v = k.astype(jnp.float32), v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    m_new = jnp.maximum(logf + m, ig.astype(jnp.float32))
+    fs = jnp.exp(logf + m - m_new)
+    is_ = jnp.exp(ig.astype(jnp.float32) - m_new)
+    C_new = fs[..., None, None] * C + is_[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = fs[..., None] * n + is_[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    den = jnp.einsum("bhd,bhd->bh", q, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h, (C_new, n_new, m_new)
+
+
+def _group_rms(x, scale, nh, eps):
+    """Per-head RMS norm over the head dim ('group norm' of xLSTM)."""
+    b = x.shape[:-1]
+    d = x.shape[-1]
+    xh = x.reshape(*b, nh, d // nh).astype(jnp.float32)
+    var = jnp.mean(jnp.square(xh), axis=-1, keepdims=True)
+    xh = xh * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(*b, d) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlstm_block(cfg: ModelConfig, p, x: jax.Array, cache=None,
+                compute_dtype=jnp.bfloat16):
+    """Pre-up-projection mLSTM block.  x: (B,S,d). cache: dict or None."""
+    d = cfg.d_model
+    inner = 2 * d
+    nh = cfg.n_heads
+    dh = inner // nh
+    b, s, _ = x.shape
+
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(compute_dtype))
+    up = constrain(up, "batch", "seq", "d_ff")
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xc, conv_new = causal_conv1d(p["conv"], xm, conv_state)
+    xc = jax.nn.silu(xc)
+    q = jnp.einsum("bsf,fg->bsg", xc, p["wq"].astype(compute_dtype))
+    k = jnp.einsum("bsf,fg->bsg", xc, p["wk"].astype(compute_dtype))
+    v = jnp.einsum("bsf,fg->bsg", xm, p["wv"].astype(compute_dtype))
+    gates = (jnp.einsum("bsf,fg->bsg", xc, p["w_if"].astype(compute_dtype))
+             + p["b_if"].astype(compute_dtype))
+    ig, fg = gates[..., :nh], gates[..., nh:]
+
+    def heads(t):  # (B,S,inner) -> (B,H,S,dh)
+        return t.reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+
+    new_cache = None
+    if cache is None:
+        h, _ = _mlstm_chunkwise(heads(q), heads(k), heads(v),
+                                ig.transpose(0, 2, 1), fg.transpose(0, 2, 1),
+                                cfg.mlstm_chunk)
+    elif s > 1:   # prefill: run chunkwise, keep final state
+        h, (C, n, m) = _mlstm_chunkwise(
+            heads(q), heads(k), heads(v),
+            ig.transpose(0, 2, 1), fg.transpose(0, 2, 1), cfg.mlstm_chunk)
+        new_cache = {"C": C, "n": n, "m": m, "conv": conv_new}
+    else:         # decode
+        state = (cache["C"], cache["n"], cache["m"])
+        hq = heads(q)[:, :, 0], heads(k)[:, :, 0], heads(v)[:, :, 0]
+        h1, (C, n, m) = _mlstm_step(*hq, ig[:, 0], fg[:, 0], state)
+        h = h1[:, :, None, :]
+        new_cache = {"C": C, "n": n, "m": m, "conv": conv_new}
+
+    h = h.astype(compute_dtype)
+    hflat = h.transpose(0, 2, 1, 3).reshape(b, s, inner)
+    hflat = _group_rms(hflat, p["gn_scale"], nh, cfg.norm_eps)
+    hflat = hflat * jax.nn.silu(z)
+    y = jnp.einsum("bsf,fd->bsd", hflat, p["w_down"].astype(compute_dtype))
+    return constrain(y, "batch", "seq", "d_model"), new_cache
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    inner = 2 * d
+    nh = cfg.n_heads
+    dh = inner // nh
+    return {
+        "C": Spec((batch, nh, dh, dh), ("batch", None, None, None), "zeros",
+                  dtype="float32"),
+        "n": Spec((batch, nh, dh), ("batch", None, None), "zeros",
+                  dtype="float32"),
+        "m": Spec((batch, nh), ("batch", None), "zeros", dtype="float32"),
+        "conv": Spec((batch, cfg.conv_width - 1, inner),
+                     ("batch", None, "d_ff"), "zeros"),
+    }
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def slstm_block_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    ffn_inner = int(d * 4 / 3) // 64 * 64 or 64   # GeGLU factor 4/3
+    return {
+        "conv": conv1d_spec(cfg.conv_width, d),
+        "w_in": Spec((d, 4 * d), ("embed", "d_ff")),       # z, i, f, o
+        "b_in": Spec((4 * d,), (None,), "zeros"),
+        # recurrent block-diagonal weights: small init (0.02) — the
+        # generic 3D fan-in rule would give std 1/sqrt(n_heads) and the
+        # recurrence amplifies it exponentially over the sequence
+        "r": Spec((nh, dh, 4 * dh), (None, None, None), "normal"),
+        "gn_scale": Spec((d,), (None,), "ones"),
+        "w_up": Spec((d, 2 * ffn_inner), ("embed", "d_ff")),
+        "w_down": Spec((ffn_inner, d), ("d_ff", "embed")),
+    }
+
+
+def _slstm_cell(p, xg, state, nh):
+    """One sLSTM step. xg: (B, 4d) input-gate preacts; state dict of (B,d)."""
+    c, n, m, h = state
+    b, d4 = xg.shape
+    d = d4 // 4
+    dh = d // nh
+    hh = h.reshape(b, nh, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hh.astype(jnp.float32),
+                     p["r"].astype(jnp.float32)).reshape(b, 4 * d)
+    # both xg and rec are laid out [z | i | f | o] per head groups flattened
+    pre = xg.astype(jnp.float32) + rec
+    zp, ip, fp, op = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zp)
+    o = jax.nn.sigmoid(op)
+    logf = jax.nn.log_sigmoid(fp)
+    m_new = jnp.maximum(logf + m, ip)
+    i_ = jnp.exp(ip - m_new)
+    f_ = jnp.exp(logf + m - m_new)
+    c_new = f_ * c + i_ * z
+    n_new = f_ * n + i_
+    # normalizer floored at 1 (|c| <= n by construction, so h stays in
+    # [-1,1] either way): 1/n with n -> 0 makes backward cotangents
+    # explode x1e6 and overflow bf16 across stacked blocks.  Same
+    # stabilization family as mLSTM's max(|den|, exp(-m)) rule.
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_block(cfg: ModelConfig, p, x: jax.Array, cache=None,
+                compute_dtype=jnp.bfloat16):
+    """Post-up-projection sLSTM block. x: (B,S,d)."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    b, s, _ = x.shape
+    conv_state = cache["conv"] if cache is not None else None
+    xc, conv_new = causal_conv1d(p["conv"], x, conv_state)
+    xc = jax.nn.silu(xc)
+    xg = (jnp.einsum("bsd,de->bse", xc, p["w_in"].astype(compute_dtype))
+          + p["b_in"].astype(compute_dtype))
+
+    if cache is None:
+        c0 = jnp.zeros((b, d), jnp.float32)
+        state0 = (c0, c0, jnp.zeros((b, d), jnp.float32), c0)
+    else:
+        state0 = (cache["c"], cache["n"], cache["m"], cache["h"])
+
+    def step(carry, xg_t):
+        new = _slstm_cell(p, xg_t, carry, nh)
+        # emit the per-step output already in compute dtype: keeps the
+        # stacked ys buffer bf16 and prevents XLA from scheduling a
+        # full-array convert inside the loop (verified via hlo_analysis
+        # top_bytes — it was 2 x 1.7 TB/device of the memory term)
+        return new, new[3].astype(compute_dtype)
+
+    (c, n, m, h_last), hs = jax.lax.scan(step, state0,
+                                         jnp.moveaxis(xg, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)                            # (B,S,d)
+    hs = _group_rms(hs, p["gn_scale"], nh, cfg.norm_eps)
+    up = jnp.einsum("bsd,df->bsf", hs, p["w_up"].astype(compute_dtype))
+    g, u = jnp.split(up, 2, axis=-1)
+    y = jnp.einsum("bsf,fd->bsd",
+                   jax.nn.gelu(g, approximate=True) * u,
+                   p["w_down"].astype(compute_dtype))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": c, "n": n, "m": m, "h": h_last, "conv": conv_new}
+    return constrain(y, "batch", "seq", "d_model"), new_cache
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {
+        "c": Spec((batch, d), ("batch", None), "zeros", dtype="float32"),
+        "n": Spec((batch, d), ("batch", None), "zeros", dtype="float32"),
+        "m": Spec((batch, d), ("batch", None), "zeros", dtype="float32"),
+        "h": Spec((batch, d), ("batch", None), "zeros", dtype="float32"),
+        "conv": Spec((batch, cfg.conv_width - 1, d),
+                     ("batch", None, None), "zeros"),
+    }
+
+
+# ===========================================================================
+# RG-LRU (Griffin / RecurrentGemma)
+# ===========================================================================
+
+RGLRU_C = 8.0
+
+
+def rglru_block_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    return {
+        "w_gate": Spec((d, lru), ("embed", "lru")),        # GeLU branch
+        "w_x": Spec((d, lru), ("embed", "lru")),           # recurrent branch
+        "conv": {"w": Spec((cfg.conv_width, lru), (None, "lru")),
+                 "b": Spec((lru,), ("lru",), "zeros")},
+        "w_a": Spec((lru, lru), ("lru", None)),            # recurrence gate
+        "b_a": Spec((lru,), (None,), "zeros"),
+        "w_i": Spec((lru, lru), ("lru", None)),            # input gate
+        "b_i": Spec((lru,), (None,), "zeros"),
+        "lam": Spec((lru,), (None,), "normal"),            # Λ parameter
+        "w_down": Spec((lru, d), ("lru", "embed")),
+    }
+
+
+def _rglru_scan(a: jax.Array, b: jax.Array, h0=None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t via associative scan over axis 1."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+    if h0 is not None:
+        # fold the initial state into the first element
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return bb
+
+
+def rglru_block(cfg: ModelConfig, p, x: jax.Array, cache=None,
+                compute_dtype=jnp.bfloat16):
+    """Griffin recurrent block. x: (B,S,d)."""
+    b, s, _ = x.shape
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dl->bsl", x, p["w_gate"].astype(compute_dtype)),
+        approximate=True)
+    xr = jnp.einsum("bsd,dl->bsl", x, p["w_x"].astype(compute_dtype))
+    xr = constrain(xr, "batch", "seq", "lru")
+    conv_state = cache["conv"] if cache is not None else None
+    xc, conv_new = causal_conv1d(p["conv"], xr, conv_state)
+
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsl,lm->bsm", xc, p["w_a"].astype(compute_dtype))
+        + p["b_a"].astype(compute_dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsl,lm->bsm", xc, p["w_i"].astype(compute_dtype))
+        + p["b_i"].astype(compute_dtype)).astype(jnp.float32)
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_x = i * xc.astype(jnp.float32)
+    bterm = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * gated_x
+
+    new_cache = None
+    if cache is None:
+        h = _rglru_scan(a, bterm)
+    elif s > 1:  # prefill
+        h = _rglru_scan(a, bterm, cache["h"].astype(jnp.float32))
+        new_cache = {"h": h[:, -1], "conv": conv_new}
+    else:        # decode step
+        h1 = a[:, 0] * cache["h"].astype(jnp.float32) + bterm[:, 0]
+        h = h1[:, None, :]
+        new_cache = {"h": h1, "conv": conv_new}
+
+    y = h.astype(compute_dtype) * gate
+    y = jnp.einsum("bsl,ld->bsd", y, p["w_down"].astype(compute_dtype))
+    return constrain(y, "batch", "seq", "d_model"), new_cache
+
+
+def rglru_cache_spec(cfg: ModelConfig, batch: int):
+    lru = cfg.lru_width or cfg.d_model
+    return {
+        "h": Spec((batch, lru), ("batch", "lru"), "zeros", dtype="float32"),
+        "conv": Spec((batch, cfg.conv_width - 1, lru),
+                     ("batch", None, "lru"), "zeros"),
+    }

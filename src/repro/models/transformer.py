@@ -1,0 +1,359 @@
+"""Block assembly: unified decoder blocks (dense / MoE / MLA / sliding /
+recurrent), scan-over-layers with remat, encoder-decoder support, and the
+full-model apply functions (train forward, prefill, decode step)."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import (embed, embedding_spec, ffn, ffn_spec,
+                                 layer_norm, layer_norm_spec, rms_norm,
+                                 rms_norm_spec, softcap, unembed)
+from repro.models.params import Spec
+from repro.parallel.sharding import constrain
+
+ATTN_KINDS = ("global", "local", "enc", "mla")
+RECURRENT_KINDS = ("mlstm", "slstm", "rglru")
+
+
+def _norm_spec(cfg: ModelConfig):
+    return (layer_norm_spec(cfg.d_model) if cfg.norm_type == "ln"
+            else rms_norm_spec(cfg.d_model))
+
+
+def _norm(cfg: ModelConfig, p, x):
+    return (layer_norm(p, x, cfg.norm_eps) if cfg.norm_type == "ln"
+            else rms_norm(p, x, cfg.norm_eps))
+
+
+# ---------------------------------------------------------------------------
+# Per-block specs
+# ---------------------------------------------------------------------------
+
+def block_spec(cfg: ModelConfig, kind: str, ffn_kind: Optional[str],
+               cross: bool = False) -> Dict[str, Any]:
+    spec: Dict[str, Any] = {}
+    if kind in ("global", "local", "enc"):
+        spec["ln1"] = _norm_spec(cfg)
+        spec["attn"] = attn.attn_spec(cfg, kind)
+        if cfg.sandwich_norm:
+            spec["post_attn"] = _norm_spec(cfg)
+    elif kind == "mla":
+        spec["ln1"] = _norm_spec(cfg)
+        spec["attn"] = attn.mla_spec(cfg)
+    elif kind == "mlstm":
+        spec["ln1"] = _norm_spec(cfg)
+        spec["mix"] = ssm.mlstm_block_spec(cfg)
+    elif kind == "slstm":
+        spec["ln1"] = _norm_spec(cfg)
+        spec["mix"] = ssm.slstm_block_spec(cfg)
+    elif kind == "rglru":
+        spec["ln1"] = _norm_spec(cfg)
+        spec["mix"] = ssm.rglru_block_spec(cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        spec["ln_cross"] = _norm_spec(cfg)
+        spec["cross"] = attn.attn_spec(cfg, "cross")
+    if ffn_kind == "dense":
+        spec["ln2"] = _norm_spec(cfg)
+        spec["ffn"] = ffn_spec(cfg.d_model, cfg.d_ff, cfg.ffn_gated,
+                               cfg.ffn_bias)
+        if cfg.sandwich_norm:
+            spec["post_ffn"] = _norm_spec(cfg)
+    elif ffn_kind == "dense_first":
+        spec["ln2"] = _norm_spec(cfg)
+        spec["ffn"] = ffn_spec(cfg.d_model, cfg.dense_d_ff, cfg.ffn_gated,
+                               cfg.ffn_bias)
+    elif ffn_kind == "moe":
+        spec["ln2"] = _norm_spec(cfg)
+        spec["moe"] = moe_mod.moe_spec(cfg)
+    return spec
+
+
+def block_cache_spec(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     cross_len: int = 0) -> Dict[str, Any]:
+    spec: Dict[str, Any] = {}
+    if kind in ("global", "local"):
+        spec["self"] = attn.cache_entry_spec(cfg, kind, batch, max_len)
+    elif kind == "mla":
+        spec["self"] = attn.cache_entry_spec(cfg, "mla", batch, max_len)
+    elif kind == "mlstm":
+        spec["self"] = ssm.mlstm_cache_spec(cfg, batch)
+    elif kind == "slstm":
+        spec["self"] = ssm.slstm_cache_spec(cfg, batch)
+    elif kind == "rglru":
+        spec["self"] = ssm.rglru_cache_spec(cfg, batch)
+    if cross_len:
+        kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        spec["cross"] = {
+            "ck": Spec((batch, cross_len, kv, hd),
+                       ("batch", "kv_seq", "kv_heads", "head_dim"), "zeros"),
+            "cv": Spec((batch, cross_len, kv, hd),
+                       ("batch", "kv_seq", "kv_heads", "head_dim"), "zeros"),
+        }
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Per-block apply
+# ---------------------------------------------------------------------------
+
+def apply_block(
+    cfg: ModelConfig,
+    kind: str,
+    ffn_kind: Optional[str],
+    p: Dict[str, Any],
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    cache: Optional[Dict[str, Any]] = None,
+    cache_index: Optional[jax.Array] = None,
+    enc_out: Optional[jax.Array] = None,
+    compute_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]], Tuple[jax.Array, jax.Array]]:
+    """Returns (x, new_cache_entry, (aux_loss, expert_load))."""
+    aux = jnp.asarray(0.0, jnp.float32)
+    load = jnp.zeros((max(cfg.n_experts, 1),), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    self_cache = cache.get("self") if cache else None
+
+    h = _norm(cfg, p["ln1"], x)
+    if kind in ("global", "local", "enc"):
+        y, c = attn.self_attention(
+            cfg, p["attn"], h, kind=kind, positions=positions,
+            cache=self_cache, cache_index=cache_index,
+            compute_dtype=compute_dtype)
+        if cfg.sandwich_norm:
+            y = _norm(cfg, p["post_attn"], y)
+    elif kind == "mla":
+        y, c = attn.mla_attention(
+            cfg, p["attn"], h, positions=positions, cache=self_cache,
+            cache_index=cache_index, compute_dtype=compute_dtype)
+    elif kind == "mlstm":
+        y, c = ssm.mlstm_block(cfg, p["mix"], h, self_cache, compute_dtype)
+    elif kind == "slstm":
+        y, c = ssm.slstm_block(cfg, p["mix"], h, self_cache, compute_dtype)
+    elif kind == "rglru":
+        y, c = ssm.rglru_block(cfg, p["mix"], h, self_cache, compute_dtype)
+    else:
+        raise ValueError(kind)
+    x = x + y
+    if c is not None:
+        new_cache["self"] = c
+
+    if "cross" in p:
+        h = _norm(cfg, p["ln_cross"], x)
+        if cache is not None and "cross" in cache and enc_out is None:
+            # decode: reuse cached cross K/V
+            ck, cv = cache["cross"]["ck"], cache["cross"]["cv"]
+            y = _cross_from_cache(cfg, p["cross"], h, ck, cv, compute_dtype)
+            new_cache["cross"] = cache["cross"]
+        else:
+            y = attn.cross_attention(cfg, p["cross"], h, enc_out,
+                                     compute_dtype)
+            if cache is not None:
+                ck = jnp.einsum("btd,dhk->bthk", enc_out,
+                                p["cross"]["wk"].astype(compute_dtype))
+                cv = jnp.einsum("btd,dhk->bthk", enc_out,
+                                p["cross"]["wv"].astype(compute_dtype))
+                new_cache["cross"] = {"ck": ck, "cv": cv}
+        x = x + y
+
+    if ffn_kind in ("dense", "dense_first"):
+        h = _norm(cfg, p["ln2"], x)
+        y = ffn(p["ffn"], h, compute_dtype, cfg.ffn_act)
+        if cfg.sandwich_norm and "post_ffn" in p:
+            y = _norm(cfg, p["post_ffn"], y)
+        x = x + y
+    elif ffn_kind == "moe":
+        h = _norm(cfg, p["ln2"], x)
+        y, aux, load = moe_mod.moe_ffn(cfg, p["moe"], h, compute_dtype)
+        x = x + y
+    return x, (new_cache if new_cache else None), (aux, load)
+
+
+def _cross_from_cache(cfg, p, x, ck, cv, compute_dtype):
+    hd = cfg.resolved_head_dim
+    scale = 1.0 / math.sqrt(hd)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute_dtype))
+    mask = jnp.ones((1, 1, 1, x.shape[1], ck.shape[1]), bool)
+    out = attn._dot_attention(q, ck, cv, mask, scale, 0.0, cfg.attn_impl,
+                              cfg.attn_chunk)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Layer-stack layout
+# ---------------------------------------------------------------------------
+
+def _ffn_kind_for(cfg: ModelConfig, kind: str, is_first_dense: bool) -> Optional[str]:
+    if kind in ("mlstm", "slstm"):
+        return None                       # integrated in the block
+    if is_first_dense:
+        return "dense_first"
+    return "moe" if cfg.n_experts else "dense"
+
+
+def stack_layout(cfg: ModelConfig):
+    """(first_dense_kinds, scanned_pattern, tail_kinds) for the decoder."""
+    first = [("mla" if cfg.use_mla else "global", "dense_first")] \
+        * cfg.first_dense_layers
+    pat = [(k, _ffn_kind_for(cfg, k, False)) for k in cfg.pattern]
+    tail = [(k, _ffn_kind_for(cfg, k, False)) for k in cfg.tail_pattern]
+    return first, pat, tail
+
+
+def decoder_spec(cfg: ModelConfig, cross: bool = False):
+    from repro.models import params as P
+    first, pat, tail = stack_layout(cfg)
+    spec: Dict[str, Any] = {}
+    for i, (k, fk) in enumerate(first):
+        spec[f"first_{i}"] = block_spec(cfg, k, fk, cross)
+    if cfg.n_blocks > 0:
+        pat_spec = {f"sub{j}": block_spec(cfg, k, fk, cross)
+                    for j, (k, fk) in enumerate(pat)}
+        spec["blocks"] = P.stack(pat_spec, cfg.n_blocks)
+    for i, (k, fk) in enumerate(tail):
+        spec[f"tail_{i}"] = block_spec(cfg, k, fk, cross)
+    return spec
+
+
+def decoder_cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+                       cross_len: int = 0):
+    from repro.models import params as P
+    first, pat, tail = stack_layout(cfg)
+    spec: Dict[str, Any] = {}
+    for i, (k, _) in enumerate(first):
+        spec[f"first_{i}"] = block_cache_spec(cfg, k, batch, max_len, cross_len)
+    if cfg.n_blocks > 0:
+        pat_spec = {f"sub{j}": block_cache_spec(cfg, k, batch, max_len, cross_len)
+                    for j, (k, _) in enumerate(pat)}
+        spec["blocks"] = P.stack(pat_spec, cfg.n_blocks)
+    for i, (k, _) in enumerate(tail):
+        spec[f"tail_{i}"] = block_cache_spec(cfg, k, batch, max_len, cross_len)
+    return spec
+
+
+def apply_decoder(
+    cfg: ModelConfig,
+    params: Dict[str, Any],
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    cache: Optional[Dict[str, Any]] = None,
+    cache_index: Optional[jax.Array] = None,
+    enc_out: Optional[jax.Array] = None,
+    train: bool = False,
+    compute_dtype=jnp.bfloat16,
+):
+    """Runs first-dense layers, the scanned pattern blocks, and tail layers.
+
+    Returns (x, new_cache, (aux_loss, expert_load))."""
+    first, pat, tail = stack_layout(cfg)
+    aux = jnp.asarray(0.0, jnp.float32)
+    load = jnp.zeros((max(cfg.n_experts, 1),), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+
+    def run_block(kind, fk, p, x, c):
+        return apply_block(cfg, kind, fk, p, x, positions=positions,
+                           cache=c, cache_index=cache_index, enc_out=enc_out,
+                           compute_dtype=compute_dtype)
+
+    for i, (k, fk) in enumerate(first):
+        c = cache.get(f"first_{i}") if cache else None
+        x, nc, (a, l) = run_block(k, fk, params[f"first_{i}"], x, c)
+        aux, load = aux + a, load + l
+        if nc is not None:
+            new_cache[f"first_{i}"] = nc
+
+    if cfg.n_blocks > 0:
+        def scan_body(carry, xs):
+            x, aux, load = carry
+            if cache is not None:
+                bp, bc = xs
+            else:
+                bp, bc = xs, None
+            nc_out = {}
+            for j, (k, fk) in enumerate(pat):
+                c = bc.get(f"sub{j}") if bc else None
+                x, nc, (a, l) = run_block(k, fk, bp[f"sub{j}"], x, c)
+                aux, load = aux + a, load + l
+                nc_out[f"sub{j}"] = nc if nc is not None else {}
+            return (x, aux, load), nc_out
+
+        body = scan_body
+        if train and cfg.remat:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(scan_body, policy=policy)
+        xs = (params["blocks"], cache["blocks"]) if cache is not None \
+            else params["blocks"]
+        (x, aux, load), ncs = jax.lax.scan(body, (x, aux, load), xs)
+        if cache is not None:
+            new_cache["blocks"] = ncs
+
+    for i, (k, fk) in enumerate(tail):
+        c = cache.get(f"tail_{i}") if cache else None
+        x, nc, (a, l) = run_block(k, fk, params[f"tail_{i}"], x, c)
+        aux, load = aux + a, load + l
+        if nc is not None:
+            new_cache[f"tail_{i}"] = nc
+
+    return x, (new_cache if cache is not None else None), (aux, load)
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encoder_spec(cfg: ModelConfig):
+    from repro.models import params as P
+    blk = block_spec(cfg, "enc", "dense")
+    return {"blocks": P.stack(blk, cfg.n_encoder_layers),
+            "ln_post": _norm_spec(cfg)}
+
+
+def apply_encoder(cfg: ModelConfig, params, x, positions, train=False,
+                  compute_dtype=jnp.bfloat16):
+    def body(carry, bp):
+        y, _, _ = apply_block(cfg, "enc", "dense", bp, carry,
+                              positions=positions,
+                              compute_dtype=compute_dtype)
+        return y, None
+    fn = body
+    if train and cfg.remat:
+        fn = jax.checkpoint(body,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(fn, x, params["blocks"])
+    return _norm(cfg, params["ln_post"], x)
+
+
+def sinusoidal_positions(seq: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((seq, dim), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+def sinusoidal_at(pos: jax.Array, dim: int, dtype=jnp.float32) -> jax.Array:
+    """Sinusoidal embedding for a (possibly traced) scalar position."""
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / dim))
+    ang = pos.astype(jnp.float32) * div
+    pe = jnp.zeros((dim,), jnp.float32)
+    pe = pe.at[0::2].set(jnp.sin(ang))
+    pe = pe.at[1::2].set(jnp.cos(ang))
+    return pe.astype(dtype)

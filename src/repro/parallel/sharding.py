@@ -1,0 +1,225 @@
+"""Logical-axis sharding with divisibility-checked fallback.
+
+Model code never names mesh axes directly; it tags array dimensions with
+*logical* names ("batch", "heads", "d_ff", "expert", ...).  A rule table
+maps each logical name to an ordered list of candidate mesh-axis tuples;
+resolution picks the first candidate whose axes (a) exist in the mesh,
+(b) are not already used by another dimension of the same array, and
+(c) evenly divide the dimension.  Anything that cannot shard falls back
+to replication and is recorded in ``FALLBACK_LOG`` so the dry-run report
+can show exactly what got replicated and why.
+
+This is what makes all 40 (arch x shape) cells lower on both the
+single-pod (16,16) and the multi-pod (2,16,16) mesh without per-arch
+hand-tuning.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Candidate = Optional[Tuple[str, ...]]
+Rules = dict  # logical name -> tuple of Candidate, tried in order
+
+
+def _c(*names) -> Tuple[Candidate, ...]:
+    """Helper: each arg is either a tuple of mesh axes or None."""
+    out = []
+    for n in names:
+        if n is None:
+            out.append(None)
+        elif isinstance(n, str):
+            out.append((n,))
+        else:
+            out.append(tuple(n))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Rule tables.  "pod" exists only on the multi-pod mesh; candidates naming it
+# are skipped automatically on the single-pod mesh.
+# ---------------------------------------------------------------------------
+
+# Training: DP(+pod) over batch, FSDP over the embed dim of weights along
+# "data", TP over heads / d_ff / vocab along "model", EP over "data".
+TRAIN_RULES: Rules = {
+    "batch":    _c(("pod", "data"), "data", None),
+    "seq":      _c(None),
+    "kv_seq":   _c(None),
+    "embed":    _c("data", None),          # FSDP shard dim of weights
+    "embed_tp": _c("model", None),         # activation d_model when TP'd
+    "d_model":  _c(None),                  # activation d_model (replicated)
+    "heads":    _c("model", None),
+    "kv_heads": _c("model", None),
+    "head_dim": _c(None),
+    "d_ff":     _c("model", None),
+    "vocab":    _c("model", None),
+    "expert":   _c("data", None),          # EP: experts over data
+    "expert2d": _c(("data", "model"), "data", None),  # EP over both axes
+    "expert_ff": _c("model", None),        # TP inside each expert
+    "expert_rows": _c("data", None),       # dispatch rows (one per data shard)
+    "lru":      _c("model", None),
+    "layers":   _c(None),
+    "lora":     _c(None),
+    "stack":    _c(None),
+}
+
+# Decode / prefill: batch over data(+pod); weights TP over "model" only —
+# serving keeps dense/attn weights REPLICATED over "data" because
+# FSDP-style sharding re-all-gathers every parameter on every decode step
+# (measured: 6.3 GiB/device/token on gemma2-27b, the dominant decode
+# collective; see EXPERIMENTS.md §Perf).  Expert weights stay EP-sharded
+# over "data" via the separate "expert" axis.  KV cache: batch over data,
+# heads over model; long-context shards the cache sequence instead.
+SERVE_RULES: Rules = dict(TRAIN_RULES)
+SERVE_RULES.update({
+    "batch":    _c(("pod", "data"), "data", None),
+    "kv_seq":   _c(None),
+    "cache_seq": _c(None),       # overridden to ("model",) for long_500k
+    "expert":   _c("data", None),
+    "embed":    _c(None),
+})
+
+LONG_CONTEXT_OVERRIDES = {
+    # batch=1: nothing to DP over -> shard the KV cache sequence instead.
+    "cache_seq": _c("model", None),
+    "kv_seq":    _c(None),
+    "batch":     _c(None),
+}
+
+
+def make_rules(kind: str, *, long_context: bool = False) -> Rules:
+    rules = dict(TRAIN_RULES if kind == "train" else SERVE_RULES)
+    if long_context:
+        rules.update(LONG_CONTEXT_OVERRIDES)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+FALLBACK_LOG: list = []  # (context, dim_name, dim_size, candidate, reason)
+
+
+class _Active(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[Rules] = None
+        self.context: str = ""
+
+
+_ACTIVE = _Active()
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: Rules, context: str = ""):
+    """Make (mesh, rules) visible to ``constrain`` inside model code."""
+    prev = (_ACTIVE.mesh, _ACTIVE.rules, _ACTIVE.context)
+    _ACTIVE.mesh, _ACTIVE.rules, _ACTIVE.context = mesh, rules, context
+    try:
+        yield
+    finally:
+        _ACTIVE.mesh, _ACTIVE.rules, _ACTIVE.context = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE.mesh
+
+
+def resolve_spec(
+    dims: Sequence[int],
+    names: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Rules,
+    context: str = "",
+) -> PartitionSpec:
+    """Resolve logical dimension names to a PartitionSpec for ``mesh``."""
+    assert len(dims) == len(names), (dims, names)
+    used: set = set()
+    spec = []
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, name in zip(dims, names):
+        chosen: Candidate = None
+        if name is not None:
+            for cand in rules.get(name, (None,)):
+                if cand is None:
+                    chosen = None
+                    break
+                if any(a not in axis_sizes for a in cand):
+                    continue            # axis absent on this mesh (e.g. "pod")
+                if any(a in used for a in cand):
+                    continue            # axis already used by another dim
+                size = 1
+                for a in cand:
+                    size *= axis_sizes[a]
+                if dim % size != 0:
+                    FALLBACK_LOG.append((context, name, dim, cand, "indivisible"))
+                    continue
+                chosen = cand
+                break
+        if chosen is None:
+            spec.append(None)
+        else:
+            used.update(chosen)
+            spec.append(chosen if len(chosen) > 1 else chosen[0])
+    return PartitionSpec(*spec)
+
+
+def named_sharding(
+    dims: Sequence[int],
+    names: Sequence[Optional[str]],
+    mesh: Optional[Mesh] = None,
+    rules: Optional[Rules] = None,
+    context: str = "",
+) -> Optional[NamedSharding]:
+    mesh = mesh or _ACTIVE.mesh
+    rules = rules or _ACTIVE.rules
+    if mesh is None or rules is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(dims, names, mesh, rules, context))
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` via logical names; no-op without a mesh."""
+    if _ACTIVE.mesh is None or _ACTIVE.rules is None:
+        return x
+    spec = resolve_spec(x.shape, names, _ACTIVE.mesh, _ACTIVE.rules, _ACTIVE.context)
+    sh = NamedSharding(_ACTIVE.mesh, spec)
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def tree_shardings(shape_tree, axes_tree, mesh, rules, context: str = ""):
+    """NamedSharding tree for a pytree of ShapeDtypeStructs + axes tuples."""
+    return jax.tree.map(
+        lambda s, a: NamedSharding(
+            mesh, resolve_spec(s.shape, a, mesh, rules, context)
+        ),
+        shape_tree,
+        axes_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t
+        ),
+    )
+
+
+def clear_fallback_log():
+    FALLBACK_LOG.clear()
+
+
+def fallback_summary() -> str:
+    if not FALLBACK_LOG:
+        return "no sharding fallbacks"
+    lines = []
+    seen = set()
+    for ctx, name, dim, cand, reason in FALLBACK_LOG:
+        key = (ctx, name, dim, cand)
+        if key in seen:
+            continue
+        seen.add(key)
+        lines.append(f"  [{ctx}] {name}={dim} !-> {cand} ({reason})")
+    return "sharding fallbacks:\n" + "\n".join(lines)

@@ -1,0 +1,113 @@
+"""Training loop with fault tolerance (checkpoint/auto-resume), the
+BALBOA ingest data plane, and failure injection for tests.
+
+This is the host-scale loop the examples run on the container's CPU
+devices; the *same* step function is what the multi-pod dry-run lowers
+for the production meshes — one code path, two scales.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig, TrainConfig
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.models import params as P
+from repro.models.model import Model
+from repro.optim.optimizers import make_optimizer
+from repro.parallel import sharding as sh
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainResult:
+    steps_run: int
+    final_loss: float
+    losses: list
+    resumed_from: Optional[int]
+    wall_s: float
+
+
+class Trainer:
+    """Fault-tolerant trainer: init-or-resume, checkpoint every N steps,
+    survives injected crashes by restarting from the latest step."""
+
+    def __init__(self, model: Model, tc: TrainConfig,
+                 mesh=None, rules=None):
+        self.model = model
+        self.tc = tc
+        self.mesh = mesh
+        self.rules = rules or sh.make_rules("train")
+        self.step_fn, self.opt = make_train_step(model, tc)
+        self.ckpt = Checkpointer(tc.checkpoint_dir)
+        self._jitted = jax.jit(self.step_fn, donate_argnums=(0, 1))
+
+    def init_state(self, seed: int = 0):
+        params = self.model.init_params(jax.random.key(seed))
+        ospec = self.opt.state_spec(self.model.param_spec())
+        opt_state = P.init(ospec, jax.random.key(seed + 1), "float32")
+        return params, opt_state
+
+    def run(self, batches: Iterator[Dict[str, np.ndarray]],
+            steps: Optional[int] = None,
+            crash_at: Optional[int] = None) -> TrainResult:
+        """Train; if a checkpoint exists in tc.checkpoint_dir, resume.
+        ``crash_at``: raise at that step (failure-injection for tests)."""
+        t0 = time.time()
+        steps = steps or self.tc.steps
+        resumed_from = None
+        params, opt_state = self.init_state(self.tc.seed)
+        start = 0
+        if self.ckpt.latest_step() is not None:
+            like = {"params": params, "opt": opt_state}
+            start, state = self.ckpt.restore(like)
+            params, opt_state = state["params"], state["opt"]
+            resumed_from = start
+        losses = []
+        ctx = sh.activate(self.mesh, self.rules) if self.mesh is not None \
+            else _null_ctx()
+        with ctx:
+            for i, batch in enumerate(batches):
+                step = start + i
+                if step >= steps:
+                    break
+                if crash_at is not None and step == crash_at:
+                    raise RuntimeError(f"injected failure at step {step}")
+                batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                params, opt_state, metrics = self._jitted(
+                    params, opt_state, batch, jnp.asarray(step, jnp.int32))
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                if step % self.tc.log_every == 0:
+                    print(f"[train] step {step} loss {loss:.4f} "
+                          f"lr {float(metrics['lr']):.2e} "
+                          f"gnorm {float(metrics['grad_norm']):.3f}",
+                          flush=True)
+                if (step + 1) % self.tc.checkpoint_every == 0:
+                    self.ckpt.save(step + 1,
+                                   {"params": params, "opt": opt_state})
+        self.ckpt.wait()
+        return TrainResult(len(losses), losses[-1] if losses else float("nan"),
+                           losses, resumed_from, time.time() - t0)
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def lm_batch_iterator(cfg: ModelConfig, batch: int, seq: int,
+                      n: int = 10**9, seed: int = 0):
+    from repro.data.synthetic import lm_shard
+    i = 0
+    while i < n:
+        yield lm_shard(i, batch, seq, cfg.vocab, seed=seed)
+        i += 1

@@ -1,0 +1,111 @@
+"""Train / serve step builders — the functions the launcher jits/lowers."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig, TrainConfig
+from repro.models.model import Model
+from repro.optim.optimizers import (clip_by_global_norm, compress_grads_bf16,
+                                    cosine_schedule, make_optimizer)
+
+GATE_BIAS_LR = 0.001      # DeepSeek-V3 aux-loss-free bias update rate
+
+
+def _update_gate_bias(params, expert_load):
+    """Aux-loss-free load balancing (V3): nudge every router gate bias
+    against the measured violation sign."""
+    mean = jnp.mean(expert_load)
+    delta = GATE_BIAS_LR * jnp.sign(mean - expert_load)
+
+    def fix(path, x):
+        if path and getattr(path[-1], "key", None) == "gate_bias":
+            return x + delta.astype(x.dtype)
+        return x
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+def make_train_step(model: Model, tc: TrainConfig,
+                    total_steps: Optional[int] = None) -> Callable:
+    cfg = model.cfg
+    opt = make_optimizer(cfg.optimizer, tc.weight_decay)
+    schedule = cosine_schedule(tc.learning_rate, tc.warmup_steps,
+                               total_steps or tc.steps)
+
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch)
+            return loss, metrics
+
+        if tc.microbatches > 1:
+            # gradient accumulation: split the global batch along its
+            # batch dim (mrope_pos carries batch on axis 1)
+            full_b = batch["tokens"].shape[0]
+            size = full_b // tc.microbatches
+
+            def slice_mb(i):
+                def sl(x):
+                    if x.ndim >= 1 and x.shape[0] == full_b:
+                        return jax.lax.dynamic_slice_in_dim(
+                            x, i * size, size, 0)
+                    if x.ndim >= 2 and x.shape[1] == full_b:
+                        return jax.lax.dynamic_slice_in_dim(
+                            x, i * size, size, 1)
+                    return x
+                return jax.tree.map(sl, batch)
+
+            def grad_of(mb):
+                return jax.value_and_grad(
+                    lambda p: model.loss(p, mb), has_aux=True)(params)
+
+            (loss0, metrics), g0 = grad_of(slice_mb(0))
+
+            def micro(i, carry):
+                gsum, lsum, msum = carry
+                (l, m), g = grad_of(slice_mb(i))
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l,
+                        jax.tree.map(jnp.add, msum, m))
+
+            grads, loss, metrics = jax.lax.fori_loop(
+                1, tc.microbatches, micro, (g0, loss0, metrics))
+            inv = 1.0 / tc.microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            metrics = jax.tree.map(lambda m: m * inv, metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+
+        if tc.pod_grad_compression == "bf16":
+            grads = compress_grads_bf16(grads)
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        lr = schedule(step)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        if cfg.aux_free_bias:
+            params = _update_gate_bias(params, metrics["expert_load"])
+        out_metrics = {
+            "loss": metrics["loss"], "xent": metrics["xent"],
+            "aux": metrics["aux"], "grad_norm": gnorm, "lr": lr,
+        }
+        return params, opt_state, out_metrics
+
+    return train_step, opt
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill_step(params, batch, cache):
+        logits, new_cache = model.prefill(params, batch, cache)
+        return logits, new_cache
+    return prefill_step
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode_step(params, cache, tokens, index):
+        logits, new_cache = model.decode_step(params, cache, tokens, index)
+        # greedy next token (serving returns tokens, not logits, to keep
+        # the host <-> device traffic at O(batch))
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache
+    return decode_step

@@ -1,0 +1,39 @@
+"""Multi-pod dry-run smoke: one real cell lowered + compiled in a fresh
+subprocess (the 512-device XLA flag must be set before jax init, so this
+cannot run in-process with the rest of the suite).  The full 80-cell
+sweep is benchmarks/roofline.py."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SNIPPET = r"""
+import json, sys
+from repro.launch.dryrun import run_cell
+r = run_cell("gemma2-2b", "long_500k", False, verbose=False)
+print("RESULT " + json.dumps(r))
+"""
+
+
+@pytest.mark.timeout(600)
+def test_dryrun_single_cell_compiles():
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    proc = subprocess.run([sys.executable, "-c", _SNIPPET],
+                          capture_output=True, text=True, timeout=580,
+                          env=env, cwd=root)
+    result = None
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            result = json.loads(line[len("RESULT "):])
+    assert result is not None, proc.stderr[-800:]
+    assert result["status"] == "ok", result
+    assert result["chips"] == 256
+    assert result["terms"]["memory_s"] > 0
+    # long-context decode on a hybrid local/global arch: the KV cache is
+    # sequence-sharded, so per-device argument bytes must be far below
+    # the unsharded cache size
+    assert result["memory"]["argument_bytes"] < 64 * 2**30

@@ -1,0 +1,139 @@
+"""Per-kernel allclose tests: Pallas (interpret mode) vs pure-jnp oracle,
+with shape/dtype sweeps (hypothesis) and authoritative external checks
+(FIPS-197 vectors for AES, zlib for CRC32)."""
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import (CRC_TABLE, expand_key, aes_decrypt_ref,
+                               aes_encrypt_ref)
+from repro.kernels.dpi_mlp import init_dpi_params, ternarize, train_dpi_params
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# AES
+# ---------------------------------------------------------------------------
+
+def test_aes_fips197_vector():
+    key = np.arange(16, dtype=np.uint8)
+    pt = np.frombuffer(bytes.fromhex("00112233445566778899aabbccddeeff"),
+                       np.uint8)
+    rk = expand_key(key)
+    ct = np.asarray(ops.aes_ecb(jnp.asarray(pt[None]), rk, impl="ref"))[0]
+    assert ct.tobytes().hex() == "69c4e0d86a7b0430d8cdb78070b4c55a"
+    ct2 = np.asarray(ops.aes_ecb(jnp.asarray(pt[None]), rk, impl="pallas"))[0]
+    assert (ct == ct2).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 2048), seed=st.integers(0, 2**31))
+def test_aes_pallas_matches_ref_and_roundtrips(n, seed):
+    rng = np.random.default_rng(seed)
+    blocks = rng.integers(0, 256, (n, 16), dtype=np.uint8)
+    rk = expand_key(rng.integers(0, 256, 16, dtype=np.uint8))
+    e_p = np.asarray(ops.aes_ecb(jnp.asarray(blocks), rk, impl="pallas"))
+    e_r = np.asarray(ops.aes_ecb(jnp.asarray(blocks), rk, impl="ref"))
+    np.testing.assert_array_equal(e_p, e_r)
+    d = np.asarray(ops.aes_ecb(jnp.asarray(e_p), rk, decrypt=True,
+                               impl="pallas"))
+    np.testing.assert_array_equal(d, blocks)
+
+
+def test_aes_ecb_identical_blocks_leak():
+    """ECB property the paper's service inherits: identical plaintext
+    blocks -> identical ciphertext blocks (documented limitation)."""
+    key = RNG.integers(0, 256, 16, dtype=np.uint8)
+    rk = expand_key(key)
+    blocks = np.tile(RNG.integers(0, 256, (1, 16), dtype=np.uint8), (4, 1))
+    ct = np.asarray(ops.aes_ecb(jnp.asarray(blocks), rk))
+    assert (ct == ct[0]).all()
+
+
+# ---------------------------------------------------------------------------
+# CRC32
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 64), mtu=st.sampled_from([64, 256, 512, 4096]),
+       seed=st.integers(0, 2**31))
+def test_crc32_matches_zlib(n, mtu, seed):
+    rng = np.random.default_rng(seed)
+    pay = rng.integers(0, 256, (n, mtu), dtype=np.uint8)
+    plen = rng.integers(0, mtu + 1, n).astype(np.int32)
+    for impl in ("pallas", "ref"):
+        got = np.asarray(ops.crc32(jnp.asarray(pay), jnp.asarray(plen),
+                                   impl=impl))
+        want = np.array([zlib.crc32(pay[i, :plen[i]].tobytes()) & 0xFFFFFFFF
+                         for i in range(n)], np.uint32)
+        np.testing.assert_array_equal(got, want, err_msg=impl)
+
+
+def test_crc32_detects_corruption():
+    pay = RNG.integers(0, 256, (4, 512), dtype=np.uint8)
+    plen = np.full(4, 512, np.int32)
+    c1 = np.asarray(ops.crc32(jnp.asarray(pay), jnp.asarray(plen)))
+    pay2 = pay.copy()
+    pay2[2, 100] ^= 0x01          # single bit flip
+    c2 = np.asarray(ops.crc32(jnp.asarray(pay2), jnp.asarray(plen)))
+    assert c1[2] != c2[2] and (c1[[0, 1, 3]] == c2[[0, 1, 3]]).all()
+
+
+# ---------------------------------------------------------------------------
+# DPI MLP
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(1, 16), mtu=st.sampled_from([64, 256, 4096]),
+       seed=st.integers(0, 2**31))
+def test_dpi_pallas_matches_ref(n, mtu, seed):
+    rng = np.random.default_rng(seed)
+    params = ternarize(init_dpi_params(jax.random.key(seed % 97)))
+    pay = rng.integers(0, 256, (n, mtu), dtype=np.uint8)
+    s_p = np.asarray(ops.dpi_scores(jnp.asarray(pay), params, impl="pallas"))
+    s_r = np.asarray(ops.dpi_scores(jnp.asarray(pay), params, impl="ref"))
+    np.testing.assert_allclose(s_p, s_r, rtol=1e-5, atol=1e-5)
+
+
+def test_dpi_training_separates_classes():
+    from repro.data.dpi_dataset import make_dataset
+    x, y = make_dataset(1024, seed=1)
+    params = train_dpi_params(x, y, steps=200)
+    xt, yt = make_dataset(512, seed=2)
+    scores = np.asarray(ops.dpi_scores(
+        jnp.asarray(xt.reshape(len(xt), 64)), params, impl="ref"))[:, 0]
+    acc = ((scores > 0) == (yt > 0.5)).mean()
+    assert acc > 0.85, f"ternary DPI accuracy too low: {acc}"
+
+
+# ---------------------------------------------------------------------------
+# DLRM preprocessing
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 700), n_dense=st.integers(1, 16),
+       n_sparse=st.integers(1, 30), modulus=st.sampled_from([7, 1000, 100000]),
+       seed=st.integers(0, 2**31))
+def test_preproc_pallas_matches_ref(m, n_dense, n_sparse, modulus, seed):
+    rng = np.random.default_rng(seed)
+    recs = rng.integers(-10**6, 2**30, (m, n_dense + n_sparse)
+                        ).astype(np.int32)
+    p = np.asarray(ops.preproc(jnp.asarray(recs), n_dense, modulus,
+                               impl="pallas"))
+    r = np.asarray(ops.preproc(jnp.asarray(recs), n_dense, modulus,
+                               impl="ref"))
+    np.testing.assert_array_equal(p, r)
+
+
+def test_preproc_semantics():
+    recs = np.array([[-5, 0, 99, 12345]], np.int32)
+    out = np.asarray(ops.preproc(jnp.asarray(recs), 3, 100, impl="pallas"))
+    dense = out[:, :3].view(np.float32)[0]
+    np.testing.assert_allclose(dense, [0.0, 0.0, np.log1p(99)], rtol=1e-6)
+    assert out[0, 3] == 12345 % 100
