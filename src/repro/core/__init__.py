@@ -2,9 +2,19 @@
 
 packet / qp / pipeline   — RoCE v2 framing, per-QP tables, RX/TX FSMs
 flow_control             — ACK-clocked windows + RX crediting (§4.3/4.4)
-retransmit / netsim      — reliability under loss (§4.2)
+retransmit / netsim      — reliability under loss (§4.2); netsim also
+                           models a switched fabric (incast/congestion)
 services                 — on-path & parallel-path enhancements (§5)
 rdma                     — the full endpoint (verbs of §4.6)
 ingest                   — storage -> RDMA -> services -> device (§8)
 sniffer                  — PCAP traffic capture (§4.7)
+
+FPGA -> TPU design dual (the repo-wide translation rule): the FPGA
+realizes deep pipelines processing one beat per cycle with per-QP state
+in BRAM; these modules keep identical semantics (same tables, same FSM
+decisions, same wire format) but move the parallelism to the axes a
+vector machine has — SIMD across packets and payload bytes, and
+vectorization across queue pairs, which is the axis the paper scales
+along (hundreds of QPs).  See docs/ARCHITECTURE.md for the full
+paper-to-code map.
 """

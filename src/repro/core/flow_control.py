@@ -15,6 +15,14 @@ Invariants (property-tested in tests/test_transport.py):
   * outstanding(qp) <= window(qp) at every point in time
   * a request is never dropped by flow control, only delayed
   * credits never go negative; total accepted <= total credits granted
+
+FPGA -> TPU design dual: on the FPGA these ledgers are small counters
+next to the pipeline, updated at line rate; here they are host-side
+control-plane state (python, per-QP lists) because they gate *when*
+work enters the jitted data plane rather than sitting on it — the
+credit check itself is replicated inside the jitted RX engines
+(``pipeline._rx_decide``), which consume a credit column and return it
+via the host ledger when the DMA completes.
 """
 from __future__ import annotations
 

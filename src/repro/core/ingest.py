@@ -14,6 +14,12 @@ Fault tolerance: a storage node that stops answering (simulated peer
 death) trips the straggler timeout; the shard is re-fetched from a
 replica via a fresh QP (QPManager.reestablish), and the credit ledger
 provides the backpressure signal.
+
+FPGA -> TPU design dual: on the FPGA the preprocessed stream DMAs
+straight from the NIC into GPU memory; here the RX pipeline's accepted
+payloads land in registered buffers that are device_put into sharded
+jax arrays — "DMA-to-GPU" becomes "host-bypass into the device mesh",
+with double buffering playing the role of the deep pipeline's overlap.
 """
 from __future__ import annotations
 

@@ -1,16 +1,39 @@
-"""Deterministic lossy-network simulator.
+"""Deterministic network simulator: point-to-point links and a switched
+fabric.
 
-The dry-run container has no NIC; the *protocol logic* of BALBOA is
-exercised against this simulator instead: configurable loss probability,
-reordering, latency (in integer ticks) and bandwidth shaping.  Tests
-drive full sender -> network -> RX-pipeline -> ACK -> retransmit loops
-and assert exactly-once in-order delivery of every byte.
+FPGA -> TPU design dual: the paper evaluates BALBOA on a physical 100G
+testbed behind a data-center switch; the dry-run container has no NIC,
+so the *protocol logic* is exercised against this simulator instead.
+Time is integer ticks; every random decision is seeded, so whole
+sender -> network -> RX-pipeline -> ACK -> retransmit loops replay
+bit-identically (which is what lets tests assert exactly-once in-order
+delivery and lets the batched engine be diffed against the scan oracle
+on the very same trace).
+
+Two topologies:
+
+``Network``        — nodes connected pairwise by two directed ``Link``s
+                     (loss, reorder, latency, jitter, bandwidth shaping).
+                     The original point-to-point model.
+``SwitchedFabric`` — a single-switch star: every node hangs off one
+                     switch port.  Packets traverse the ingress wire
+                     (per-port delay, optional loss), land in the
+                     *shared egress queue* of the destination port
+                     (drop-tail, finite capacity) and drain at the
+                     port's bandwidth.  This is where incast lives: N
+                     senders converging on one receiver overflow that
+                     receiver's egress queue exactly like a real
+                     shallow-buffered ToR switch.
+
+Both expose the same surface (``send`` / ``tick`` / ``quiescent`` /
+``now``) so ``RdmaNode`` and ``run_network`` work with either.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -87,3 +110,152 @@ class Network:
 
     def quiescent(self) -> bool:
         return all(l.in_flight == 0 for l in self.links.values())
+
+
+# ---------------------------------------------------------------------------
+# Switched fabric
+# ---------------------------------------------------------------------------
+
+def _per_port(value: Union[int, Sequence[int]], n_ports: int) -> List[int]:
+    """Broadcast a scalar config to all ports, or validate a sequence."""
+    if isinstance(value, (list, tuple)):
+        if len(value) != n_ports:
+            raise ValueError(f"per-port config of length {len(value)} "
+                             f"for {n_ports} ports")
+        return [int(v) for v in value]
+    return [int(value)] * n_ports
+
+
+@dataclasses.dataclass
+class FabricConfig:
+    """Single-switch star fabric.  ``port_bandwidth`` and ``port_delay``
+    accept either a scalar (all ports alike) or a per-port sequence."""
+    port_bandwidth: Union[int, Sequence[int]] = 4   # egress pkts per tick
+    port_delay: Union[int, Sequence[int]] = 2       # ingress wire latency
+    queue_capacity: int = 64                        # egress drop-tail depth
+    loss_prob: float = 0.0                          # random wire loss
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class PortStats:
+    enqueued: int = 0
+    delivered: int = 0
+    tail_dropped: int = 0        # drop-tail at the egress queue
+    wire_dropped: int = 0        # random loss on the ingress wire
+    max_depth: int = 0           # high-water mark of the egress queue
+
+
+class SwitchedFabric:
+    """A single switch; node ``i`` hangs off port ``i``.
+
+    Datapath per packet: ingress wire (``port_delay[src]`` ticks, seeded
+    random loss) -> destination port's egress FIFO (drop-tail at
+    ``queue_capacity``) -> drained at ``port_bandwidth[dst]`` packets
+    per tick.  The egress queue is *shared by all flows* targeting that
+    port — congestion (incast) shows up as drop-tail losses the RDMA
+    layer must recover via retransmission, exactly like a
+    shallow-buffered data-center switch.
+    """
+
+    def __init__(self, n_nodes: int, cfg: Optional[FabricConfig] = None):
+        cfg = cfg if cfg is not None else FabricConfig()
+        self.cfg = cfg
+        self.n_nodes = n_nodes
+        self.bandwidth = _per_port(cfg.port_bandwidth, n_nodes)
+        self.delay = _per_port(cfg.port_delay, n_nodes)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.now = 0
+        self._seq = 0
+        # packets on the ingress wire: (arrival_tick, seq, dst, packet)
+        self._wire: List[Tuple[int, int, int, pk.Packet]] = []
+        self.egress: List[Deque[pk.Packet]] = [
+            collections.deque() for _ in range(n_nodes)]
+        self.port_stats = [PortStats() for _ in range(n_nodes)]
+
+    def send(self, src: int, dst: int, p: pk.Packet):
+        st = self.port_stats[dst]
+        if self.cfg.loss_prob and self.rng.random() < self.cfg.loss_prob:
+            st.wire_dropped += 1
+            return
+        self._seq += 1
+        heapq.heappush(self._wire,
+                       (self.now + self.delay[src], self._seq, dst, p))
+
+    def tick(self) -> Dict[Tuple[int, int], List[pk.Packet]]:
+        """Advance one tick: move arrived packets into egress queues
+        (drop-tail), then drain each port at its bandwidth.  Returns
+        ``{(-1, dst): packets}`` — the switch is the source."""
+        self.now += 1
+        while self._wire and self._wire[0][0] <= self.now:
+            _, _, dst, p = heapq.heappop(self._wire)
+            q = self.egress[dst]
+            st = self.port_stats[dst]
+            if len(q) >= self.cfg.queue_capacity:
+                st.tail_dropped += 1
+                continue
+            q.append(p)
+            st.enqueued += 1
+            st.max_depth = max(st.max_depth, len(q))
+        out: Dict[Tuple[int, int], List[pk.Packet]] = {}
+        for dst in range(self.n_nodes):
+            q = self.egress[dst]
+            if not q:
+                continue
+            batch = [q.popleft()
+                     for _ in range(min(self.bandwidth[dst], len(q)))]
+            self.port_stats[dst].delivered += len(batch)
+            out[(-1, dst)] = batch
+        return out
+
+    def quiescent(self) -> bool:
+        return not self._wire and all(not q for q in self.egress)
+
+    # ---- telemetry ----------------------------------------------------
+    @property
+    def total_tail_dropped(self) -> int:
+        return sum(s.tail_dropped for s in self.port_stats)
+
+    @property
+    def total_delivered(self) -> int:
+        return sum(s.delivered for s in self.port_stats)
+
+
+@dataclasses.dataclass
+class IncastResult:
+    receiver: object                  # RdmaNode (port 0, the hot port)
+    senders: List[object]             # RdmaNode per sender
+    fabric: SwitchedFabric
+    ticks: int                        # simulated ticks until quiescent
+    payloads: List[np.ndarray]        # what sender i wrote (QPN i+1 at rx)
+
+
+def incast_scenario(n_senders: int, *, message_bytes: int = 65536,
+                    fabric_cfg: Optional[FabricConfig] = None,
+                    rx_credits: int = 64, fc_window: int = 16,
+                    max_ticks: int = 300_000,
+                    engine: str = "batched") -> IncastResult:
+    """The canonical congestion scenario: ``n_senders`` nodes RDMA-WRITE
+    simultaneously into one receiver through a shallow-buffered switch
+    port.  Runs until the fabric drains — callers assert delivery and
+    inspect drop/retransmit stats.
+    """
+    from repro.core.rdma import RdmaNode, run_network   # cycle-free import
+
+    cfg = fabric_cfg or FabricConfig(port_bandwidth=4, port_delay=2,
+                                     queue_capacity=32, seed=7)
+    fabric = SwitchedFabric(n_senders + 1, cfg)
+    recv = RdmaNode(0, fabric, rx_credits=rx_credits, engine=engine)
+    senders = [RdmaNode(i + 1, fabric, fc_window=fc_window, engine=engine)
+               for i in range(n_senders)]
+    rng = np.random.default_rng(13)
+    work = []
+    for s in senders:
+        qpn, _, _ = s.init_rdma(message_bytes, recv)
+        data = rng.integers(0, 256, message_bytes, dtype=np.uint8)
+        work.append((s, qpn, data))
+    for s, qpn, data in work:
+        s.rdma_write(qpn, data)
+    ticks = run_network([recv] + senders, max_ticks=max_ticks)
+    return IncastResult(receiver=recv, senders=senders, fabric=fabric,
+                        ticks=ticks, payloads=[d for _, _, d in work])

@@ -1,12 +1,13 @@
 """RoCE v2 packet model (paper §4.1).
 
 Packets follow the RoCE v2 header stack (IP / UDP / InfiniBand BTH /
-RETH) .  A *batch* of packets is a dict of arrays — the TPU-idiomatic
-dual of the FPGA's beat-pipelined header FSMs is SIMD across packets —
-and the RX/TX pipelines in ``repro.core.pipeline`` consume these batches
-under ``jax.lax`` control flow.
+RETH).  Opcode values follow the InfiniBand RC opcode space.
 
-Opcode values follow the InfiniBand RC opcode space.
+FPGA -> TPU design dual: the FPGA parses one 512-bit header beat per
+cycle through pipelined FSMs; the dual represents a *batch* of packets
+as a dict of arrays (one column per header field, payloads padded to
+MTU) so the RX/TX pipelines in ``repro.core.pipeline`` and the service
+chain are SIMD across packets instead of across clock cycles.
 """
 from __future__ import annotations
 

@@ -1,19 +1,44 @@
 """Vectorized RoCE v2 packet-processing pipeline (paper §4.1, Fig. 2).
 
-The FPGA realizes one deep pipeline processing one beat per cycle; the
-TPU-idiomatic dual processes a *batch* of packets per invocation with
-``jax.lax.scan`` carrying the per-QP state tables (PSN order within a QP
-is inherently sequential, so the scan is the honest formulation — the
-SIMD width lives in the table lookups and payload operations, which are
-fully vectorized downstream in the service chain).
+FPGA -> TPU design dual
+-----------------------
+The FPGA realizes one deep pipeline processing one header beat per cycle
+at line rate; per-QP state (ePSN/MSN/credits) lives in BRAM tables the
+pipeline reads and writes in flight.  The TPU-idiomatic dual keeps the
+same per-QP tables as jax arrays, but exposes the parallelism along a
+different axis: PSN checking is *inherently sequential per QP* yet
+*embarrassingly parallel across QPs*, exactly the axis the paper scales
+along (hundreds of QPs, Fig. 2/6).
 
-RX path:  strip/inspect headers -> PSN check against the state table ->
-          accept (emit DMA command, bump ePSN/MSN) | drop-duplicate
-          (re-ACK) | drop-out-of-order (NAK, triggers remote retransmit)
-          -> credit check (§4.3) may still drop an otherwise valid packet.
-TX path:  commands + MSN/state tables -> BTH/RETH forming -> PSN assign.
+Two jitted engines implement the same RX semantics:
 
-Both paths are jittable and differentiable-free integer programs.
+``rx_pipeline``         — the per-packet oracle: one ``lax.scan`` step
+                          per packet in arrival order.  Honest, simple,
+                          and O(batch) sequential steps.
+``rx_pipeline_batched`` — the batched multi-QP engine: packets are
+                          stable-sorted by QP (preserving per-QP arrival
+                          order), ranked within their QP segment, and
+                          processed in *waves*: wave ``t`` handles the
+                          ``t``-th packet of every QP simultaneously.
+                          One wave is a fully vectorized gather ->
+                          decide -> scatter over all lanes, so the
+                          sequential depth is the *longest per-QP
+                          segment* (≈ batch/Q for even traffic), not the
+                          batch size.  Bit-identical to the oracle
+                          (property-tested in tests/test_fabric.py).
+
+Both engines share ``_rx_decide`` — the pure header FSM — so they cannot
+drift apart.  The TX path gets the same treatment: ``tx_pipeline`` scans
+commands; ``tx_pipeline_batched`` assigns PSN ranges with a per-QP
+segmented cumulative sum.
+
+RX semantics (paper §4.1 + §4.3):
+  strip/inspect headers -> PSN check against the state table ->
+  accept (emit DMA command, bump ePSN/MSN) | drop-duplicate (re-ACK) |
+  drop-out-of-order (NAK, triggers remote retransmit) -> credit check
+  may still drop an otherwise valid packet (peer retransmits).
+
+All paths are jittable, differentiation-free integer programs.
 """
 from __future__ import annotations
 
@@ -47,14 +72,24 @@ class RxResult(NamedTuple):
     send_nak: jax.Array    # (N,) bool
 
 
-def _rx_one(tables: RxTables, p) -> Tuple[RxTables, Dict]:
-    """Process one packet against the tables (scan body)."""
-    qpn = p["qpn"]
+# ---------------------------------------------------------------------------
+# Shared header FSM (used by both the scan oracle and the batched engine)
+# ---------------------------------------------------------------------------
+
+def _rx_decide(state: Dict[str, jax.Array], p: Dict[str, jax.Array]
+               ) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+    """The pure per-packet decision function of the RX header pipeline.
+
+    ``state`` holds the packet's QP-table row (gathered); ``p`` the
+    packet header fields.  Shape-polymorphic: scalars inside the scan
+    oracle, (N,) lanes inside a batched wave.  Returns the updated row
+    and the per-packet outputs.
+    """
     opcode = p["opcode"]
     psn = p["psn"]
     plen = p["plen"].astype(jnp.int32)
-    epsn = tables.epsn[qpn]
-    credits = tables.credits[qpn]
+    epsn = state["epsn"]
+    credits = state["credits"]
 
     is_payload = jnp.isin(opcode, jnp.asarray(pk.PAYLOAD_OPS, jnp.int32))
     has_reth = jnp.isin(opcode, jnp.asarray(pk.RETH_OPS, jnp.int32))
@@ -71,25 +106,23 @@ def _rx_one(tables: RxTables, p) -> Tuple[RxTables, Dict]:
     dropped_credit = is_payload & in_seq & ~has_credit & (p["valid"] > 0)
 
     # DMA command formation (RETH starts a region; MIDDLE/LAST continue it)
-    start_addr = jnp.where(has_reth, p["vaddr"], tables.cur_vaddr[qpn])
+    start_addr = jnp.where(has_reth, p["vaddr"], state["cur_vaddr"])
     dma_addr = start_addr
-    new_cur = jnp.where(accept, start_addr + plen, tables.cur_vaddr[qpn])
+    new_cur = jnp.where(accept, start_addr + plen, state["cur_vaddr"])
     new_bytes = jnp.where(
         has_reth & accept, p["dma_len"].astype(jnp.int32) - plen,
-        jnp.where(accept, tables.bytes_left[qpn] - plen,
-                  tables.bytes_left[qpn]))
+        jnp.where(accept, state["bytes_left"] - plen, state["bytes_left"]))
     new_epsn = jnp.where(accept, (epsn + 1) & pk.PSN_MASK, epsn)
-    new_msn = jnp.where(accept & is_last, tables.msn[qpn] + 1,
-                        tables.msn[qpn])
+    new_msn = jnp.where(accept & is_last, state["msn"] + 1, state["msn"])
     new_credits = jnp.where(accept, credits - 1, credits)
 
-    tables = RxTables(
-        epsn=tables.epsn.at[qpn].set(new_epsn.astype(jnp.int32)),
-        msn=tables.msn.at[qpn].set(new_msn.astype(jnp.int32)),
-        bytes_left=tables.bytes_left.at[qpn].set(new_bytes),
-        cur_vaddr=tables.cur_vaddr.at[qpn].set(new_cur),
-        credits=tables.credits.at[qpn].set(new_credits.astype(jnp.int32)),
-    )
+    new_state = {
+        "epsn": new_epsn.astype(jnp.int32),
+        "msn": new_msn.astype(jnp.int32),
+        "bytes_left": new_bytes,
+        "cur_vaddr": new_cur,
+        "credits": new_credits.astype(jnp.int32),
+    }
     out = {
         "accept": accept, "dup": dup & is_payload, "ooo": ooo & is_payload,
         "dropped_credit": dropped_credit,
@@ -97,29 +130,181 @@ def _rx_one(tables: RxTables, p) -> Tuple[RxTables, Dict]:
         "dma_len": plen.astype(jnp.int32),
         "ack_psn": jnp.where(accept, psn, (new_epsn - 1) & pk.PSN_MASK
                              ).astype(jnp.int32),
-        "ack_qpn": qpn.astype(jnp.int32),
+        "ack_qpn": p["qpn"].astype(jnp.int32),
         # ACK policy: ack accepted last/ack_req packets and duplicates
         "send_ack": (accept & (is_last | (p["ack_req"] > 0))) |
                     (dup & is_payload),
         "send_nak": ooo & is_payload,
     }
+    return new_state, out
+
+
+_PKT_FIELDS = ("qpn", "opcode", "psn", "plen", "vaddr", "dma_len", "ack_req",
+               "valid")
+_STATE_FIELDS = ("epsn", "msn", "bytes_left", "cur_vaddr", "credits")
+
+
+def _rx_one(tables: RxTables, p) -> Tuple[RxTables, Dict]:
+    """Process one packet against the tables (scan body of the oracle)."""
+    qpn = p["qpn"]
+    state = {f: getattr(tables, f)[qpn] for f in _STATE_FIELDS}
+    new_state, out = _rx_decide(state, p)
+    tables = RxTables(**{
+        f: getattr(tables, f).at[qpn].set(new_state[f])
+        for f in _STATE_FIELDS})
     return tables, out
 
 
 @jax.jit
 def rx_pipeline(tables: RxTables, batch: Dict[str, jax.Array]
                 ) -> Tuple[RxTables, RxResult]:
-    """Run the RX header pipeline over a packet batch (in arrival order)."""
+    """Per-packet oracle: scan the RX FSM over the batch in arrival
+    order.  O(N) sequential steps — kept as the reference semantics the
+    batched engine must reproduce bit-for-bit."""
     def body(t, i):
-        p = {k: batch[k][i] for k in
-             ("qpn", "opcode", "psn", "plen", "vaddr", "dma_len", "ack_req",
-              "valid")}
+        p = {k: batch[k][i] for k in _PKT_FIELDS}
         t, out = _rx_one(t, p)
         return t, out
 
     n = batch["qpn"].shape[0]
     tables, outs = jax.lax.scan(body, tables, jnp.arange(n))
     return tables, RxResult(**{k: outs[k] for k in RxResult._fields})
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-QP engine
+# ---------------------------------------------------------------------------
+
+_OUT_KEYS = ("accept", "dup", "ooo", "dropped_credit", "dma_addr",
+             "dma_len", "ack_psn", "ack_qpn", "send_ack", "send_nak")
+_OUT_BOOL = ("accept", "dup", "ooo", "dropped_credit", "send_ack",
+             "send_nak")
+
+
+@jax.jit
+def rx_pipeline_batched(tables: RxTables, batch: Dict[str, jax.Array]
+                        ) -> Tuple[RxTables, RxResult]:
+    """Batched multi-QP RX engine (the tentpole: paper §4.1 at scale).
+
+    Grouping (all in-graph, one jitted step):
+      1. one stable sort by QP — per-QP arrival order (what the PSN FSM
+         sequences over) becomes contiguous segments; segment lengths
+         fall out of a ``searchsorted`` over the sorted keys, segment
+         ranks out of index arithmetic;
+      2. each active QP gets a dense *slot*, ordered by descending
+         segment length, so the QPs still alive in wave ``t`` are always
+         the slot prefix ``[0, m_t)`` of width ``W = min(Q, N)``;
+      3. wave ``t`` reads slot ``s``'s ``t``-th packet at sorted
+         position ``seg_off[s] + t`` — a ``(W,)`` gather — and writes
+         its outputs as one contiguous block at offset
+         ``start[t] = sum(m_0..m_{t-1})`` in (rank, slot) layout.
+
+    The ``while_loop`` carries per-slot state *vectors*; per wave there
+    is exactly one fused ``(fields, W)`` gather, one vectorized
+    ``_rx_decide`` and one ``dynamic_update_slice`` of a packed output
+    matrix — no table scatters inside the loop (XLA CPU scatter is the
+    thing to avoid; the engine performs a single N-sized scatter total,
+    for the inverse permutation).  Lanes past ``m_t`` in the fixed-width
+    block compute garbage that the next wave's write overwrites.  Trip
+    count = longest per-QP segment ≈ N/Q for even traffic, not the
+    batch size.  State is scattered back to the QP tables once, at the
+    end.
+
+    Bit-identical to ``rx_pipeline`` on valid lanes (per-QP state is
+    independent, so cross-QP reordering cannot change any decision);
+    invalid (padding) lanes yield all-zero outputs.
+    """
+    n = batch["qpn"].shape[0]
+    n_qps = tables.epsn.shape[0]
+    w = min(n_qps, n)                       # static wave width
+    valid = batch["valid"] > 0
+    key = jnp.where(valid, batch["qpn"], n_qps)   # invalid -> sentinel group
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    # one stable sort by QP; pack (key, lane) into a single int32 when it
+    # fits — a value sort is several times cheaper than argsort here
+    if (n_qps + 1) * n + n < 2 ** 31:
+        packed = jnp.sort(key.astype(jnp.int32) * n + idx)
+        sk = packed // n
+        order_k = packed - sk * n
+    else:
+        order_k = jnp.argsort(key, stable=True)
+        sk = key[order_k]
+    # header fields (int32) in sorted order, padded by W so live-lane
+    # wave gathers stay in bounds (dead lanes are clamped in the loop)
+    fmat = jnp.stack([batch[k].astype(jnp.int32) for k in _PKT_FIELDS])
+    fmat = jnp.concatenate(
+        [fmat[:, order_k], jnp.zeros((len(_PKT_FIELDS), w), jnp.int32)],
+        axis=1)
+
+    # per-QP segment lengths from the sorted keys (no scatter needed)
+    bounds = jnp.searchsorted(sk, jnp.arange(n_qps + 1)).astype(jnp.int32)
+    counts = bounds[1:] - bounds[:-1]              # (Q,) valid pkts per QP
+    seg_off_qp = bounds[:-1]                       # segment starts, sorted
+    rank_sorted = idx - bounds[sk]                 # rank within segment
+
+    # dense slots ordered by descending segment length
+    slot_to_qp = jnp.argsort(-counts, stable=True)[:w]
+    qp_to_slot = jnp.full(n_qps + 1, w, jnp.int32).at[slot_to_qp].set(
+        jnp.arange(w, dtype=jnp.int32))
+    slot_len = counts[slot_to_qp]                  # nonincreasing
+    seg_off_slot = seg_off_qp[slot_to_qp]
+
+    # wave t spans output positions [start[t], start[t] + m[t]) where
+    # m[t] = #slots with segment length > t (a slot prefix)
+    n_waves = slot_len[0] if w else jnp.int32(0)
+    m_arr = jnp.searchsorted(-slot_len, -jnp.arange(n + 1), side="left"
+                             ).astype(jnp.int32)
+    start_arr = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(m_arr).astype(jnp.int32)])
+
+    # (rank, slot) output position of every lane; invalid lanes go last
+    n_valid = bounds[n_qps]
+    pos_sorted = jnp.where(sk == n_qps, n_valid + rank_sorted,
+                           start_arr[rank_sorted] + qp_to_slot[sk])
+    # inverse permutation: original lane -> output position (packed sort
+    # again, falling back to a scatter when the packing would overflow)
+    if n * (n + w) + (n + w) < 2 ** 31:
+        pos = jnp.sort(order_k * (n + w) + pos_sorted) % (n + w)
+    else:
+        pos = jnp.zeros(n, jnp.int32).at[order_k].set(pos_sorted)
+
+    state0 = {f: getattr(tables, f)[slot_to_qp] for f in _STATE_FIELDS}
+    outs0 = jnp.zeros((len(_OUT_KEYS), n + w), jnp.int32)
+    lanes = jnp.arange(w, dtype=jnp.int32)
+
+    def cond(carry):
+        return carry[0] < n_waves
+
+    def body(carry):
+        t, state, outs = carry
+        # slot s -> its t-th packet; dead slots (t >= slot_len[s]) would
+        # index past their segment, so clamp explicitly — their lanes are
+        # masked out of the state update below and their output columns
+        # are overwritten by later waves
+        lane_idx = jnp.minimum(seg_off_slot + t, n + w - 1)
+        block = fmat[:, lane_idx]
+        p = {k: block[i] for i, k in enumerate(_PKT_FIELDS)}
+        new_state, out = _rx_decide(state, p)
+        live = lanes < m_arr[t]
+        state = {f: jnp.where(live, new_state[f], state[f])
+                 for f in _STATE_FIELDS}
+        outs = jax.lax.dynamic_update_slice(
+            outs, jnp.stack([out[k].astype(jnp.int32) for k in _OUT_KEYS]),
+            (0, start_arr[t]))
+        return t + 1, state, outs
+
+    _, state, outs = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), state0, outs0))
+
+    tables = RxTables(**{
+        f: getattr(tables, f).at[slot_to_qp].set(state[f])
+        for f in _STATE_FIELDS})
+    unsorted = jnp.where(valid, outs[:, pos], 0)   # fused unsort gather
+    res = {}
+    for i, k in enumerate(_OUT_KEYS):
+        res[k] = unsorted[i] > 0 if k in _OUT_BOOL else unsorted[i]
+    return tables, RxResult(**{k: res[k] for k in RxResult._fields})
 
 
 class TxTables(NamedTuple):
@@ -130,8 +315,8 @@ class TxTables(NamedTuple):
 @jax.jit
 def tx_pipeline(tables: TxTables, cmds: Dict[str, jax.Array]
                 ) -> Tuple[TxTables, Dict[str, jax.Array]]:
-    """TX path: assign consecutive PSNs per command (one command = one
-    message of n_pkts fragments) and bump nPSN/MSN (paper §4.1 TX)."""
+    """TX path oracle: assign consecutive PSNs per command (one command
+    = one message of n_pkts fragments) and bump nPSN/MSN (§4.1 TX)."""
     def body(t, i):
         qpn = cmds["qpn"][i]
         n_pkts = cmds["n_pkts"][i]
@@ -145,6 +330,40 @@ def tx_pipeline(tables: TxTables, cmds: Dict[str, jax.Array]
     n = cmds["qpn"].shape[0]
     tables, outs = jax.lax.scan(body, tables, jnp.arange(n))
     return tables, outs
+
+
+@jax.jit
+def tx_pipeline_batched(tables: TxTables, cmds: Dict[str, jax.Array]
+                        ) -> Tuple[TxTables, Dict[str, jax.Array]]:
+    """Batched TX engine: PSN-range assignment is a per-QP segmented
+    exclusive cumulative sum — no sequential scan at all.  Bit-identical
+    to ``tx_pipeline`` (same mod-2^24 arithmetic, per-QP independence).
+    """
+    qpn = cmds["qpn"]
+    n_pkts = cmds["n_pkts"].astype(jnp.int32)
+    n = qpn.shape[0]
+    order = jnp.argsort(qpn, stable=True)
+    sq = qpn[order]
+    sn = n_pkts[order]
+    excl = jnp.cumsum(sn) - sn                    # exclusive prefix sum
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), sq[1:] != sq[:-1]])
+    # exclusive sum at each segment start, broadcast down the segment
+    # (excl is nondecreasing, so a running max of the start values works)
+    seg_base = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, excl, 0))
+    start_sorted = (tables.npsn[sq] + (excl - seg_base)) & pk.PSN_MASK
+    start_psn = jnp.zeros(n, jnp.int32).at[order].set(
+        start_sorted.astype(jnp.int32))
+    tables = TxTables(
+        npsn=(tables.npsn.at[qpn].add(n_pkts)) & pk.PSN_MASK,
+        msn=tables.msn.at[qpn].add(1),
+    )
+    return tables, {"start_psn": start_psn}
+
+
+RX_ENGINES = {"scan": rx_pipeline, "batched": rx_pipeline_batched}
+TX_ENGINES = {"scan": tx_pipeline, "batched": tx_pipeline_batched}
 
 
 def make_rx_tables(n_qps: int, initial_credits: int = 64) -> RxTables:

@@ -10,8 +10,13 @@ Three tables, exactly as in the packet-processing pipeline of Fig. 2:
                       sequence control for large buffer transmissions)
 
 Tables default to 500 QPs (paper: "per default, these tables support up
-to 500 QPs, but can be configured").  They are arrays-of-fields so the
-jax pipeline can scan over packet batches updating them functionally.
+to 500 QPs, but can be configured").
+
+FPGA -> TPU design dual: on the FPGA these tables live in BRAM and are
+read/written by the pipeline in flight, one packet per cycle; here they
+are arrays-of-fields so the jax engines update them functionally — the
+scan oracle one packet at a time, the batched engine one *wave* (one
+packet per QP) at a time, gathered/scattered by QP index.
 """
 from __future__ import annotations
 

@@ -2,9 +2,21 @@
 
 One ``RdmaNode`` owns the QP manager, the jax RX/TX pipelines, ACK-clocked
 flow control, the retransmission buffer, RX crediting and the service
-chain.  Nodes exchange packets over ``repro.core.netsim`` — tests drive
-lossy links and assert exactly-once in-order delivery; benchmarks measure
+chain.  Nodes exchange packets over ``repro.core.netsim`` — either the
+point-to-point ``Network`` or the ``SwitchedFabric`` (shared egress
+queues, where incast congestion lives) — tests drive lossy links and
+assert exactly-once in-order delivery; benchmarks measure
 latency/throughput vs. buffer size exactly like the paper's Fig. 4.
+
+FPGA -> TPU design dual: the FPGA node is one deep pipeline fed by the
+MAC; this node is a host-side control plane (verbs, ACK clocking,
+retransmit timers — BALBOA's sequencer logic) around jitted data-plane
+kernels.  ``engine`` selects the RX data plane: ``"batched"`` (the
+multi-QP wave engine, default — one jitted step per network tick across
+all QPs) or ``"scan"`` (the per-packet oracle it is diffed against).
+TX PSN assignment stays host-side here (one message at a time at the
+verbs layer); the batched TX engine (``pipeline.tx_pipeline_batched``)
+serves bulk command streams and is exercised by tests/benchmarks.
 
 Programming model mirrors the Coyote-thread verbs of §4.6:
     qpn, rkey, buf = node.init_rdma(max_size, remote_node)
@@ -24,7 +36,6 @@ from repro.core import packet as pk
 from repro.core import pipeline as pipe
 from repro.core.flow_control import (AckClockedFlowControl, CreditManager,
                                      FlowControlConfig)
-from repro.core.netsim import Network
 from repro.core.qp import QPManager
 from repro.core.retransmit import RetransmissionBuffer
 from repro.core.services import ServiceChain
@@ -45,13 +56,18 @@ class NodeStats:
 
 
 class RdmaNode:
-    def __init__(self, node_id: int, network: Network, *,
+    def __init__(self, node_id: int, network, *,
                  n_qps: int = 500, mtu: int = pk.MTU,
                  fc_window: int = 64, rx_credits: int = 64,
                  services: Optional[ServiceChain] = None,
-                 sniffer=None):
+                 sniffer=None, engine: str = "batched"):
+        if engine not in pipe.RX_ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; "
+                             f"choose from {sorted(pipe.RX_ENGINES)}")
         self.node_id = node_id
-        self.net = network
+        self.net = network                   # Network or SwitchedFabric
+        self.engine = engine
+        self._rx_pipe = pipe.RX_ENGINES[engine]
         self.mtu = mtu
         self.qp = QPManager(n_qps, node_id)
         self.rx_tables = pipe.make_rx_tables(n_qps, rx_credits)
@@ -197,7 +213,7 @@ class RdmaNode:
         # sync credits from the host-side credit manager
         self.rx_tables = self.rx_tables._replace(
             credits=jnp.asarray(self.credits.credits, jnp.int32))
-        self.rx_tables, res = pipe.rx_pipeline(self.rx_tables, batch)
+        self.rx_tables, res = self._rx_pipe(self.rx_tables, batch)
         res = {k: np.asarray(v)[:n] for k, v in res._asdict().items()}
         self.credits.credits = list(np.asarray(self.rx_tables.credits))
 

@@ -4,6 +4,13 @@ All transmitted payloads are held in a dedicated buffer ("directly
 exposed HBM channel" on the FPGA) until the remote end acknowledges
 reception; timeouts or NAKs (PSN sequence errors) release them back onto
 the TX path without another host round-trip.
+
+FPGA -> TPU design dual: the FPGA parks payloads in HBM and replays
+them from hardware timers; the dual keeps a per-QP PSN-keyed dict of
+held packets on the host (retransmission is the rare path — it only
+runs when the simulated network loses or reorders, so it stays off the
+jitted hot path) with the same cumulative-ACK release, go-back-N NAK
+replay and exponential-backoff timer semantics.
 """
 from __future__ import annotations
 

@@ -9,9 +9,11 @@ Two placements, exactly as Fig. 1:
                         decision back to the pipeline (②, e.g. ML-DPI);
                         its latency must hide behind the packet pipeline.
 
-Payload batches are (N, MTU) uint8 arrays; the whole chain compiles to
-one jitted function (the TPU dual of "deep pipelines at line rate"), and
-each service is backed by a Pallas kernel with a pure-jnp oracle.
+FPGA -> TPU design dual: the FPGA attaches services as streaming
+kernels on the AXI payload bus, one word per cycle at line rate; here
+payload batches are (N, MTU) uint8 arrays and the whole chain compiles
+to one jitted function — "deep pipeline" becomes "fused batch kernel" —
+with each service backed by a Pallas kernel plus a pure-jnp oracle.
 """
 from __future__ import annotations
 

@@ -7,6 +7,11 @@ instrumentation footprint, and full bidirectional RX/TX capture that
 never perturbs the datapath (we only copy header fields + optionally the
 payload).  Packets are synthesized into Ethernet/IPv4/UDP/IB-BTH wire
 format so standard dissectors decode them.
+
+FPGA -> TPU design dual: the FPGA taps the MAC at line rate into a
+DMA ring; here capture is a host-side observer on RdmaNode TX/RX (the
+simulator's tick clock stands in for hardware timestamps), emitting the
+same PCAP byte format.
 """
 from __future__ import annotations
 

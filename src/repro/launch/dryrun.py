@@ -146,6 +146,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jax returns [dict, ...]
+        cost = cost[0] if cost else {}
     hlo_cost = analyze(compiled.as_text(), chips)
 
     result.update({

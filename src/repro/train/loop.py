@@ -72,26 +72,31 @@ class Trainer:
         ctx = sh.activate(self.mesh, self.rules) if self.mesh is not None \
             else _null_ctx()
         with ctx:
-            for i, batch in enumerate(batches):
-                step = start + i
-                if step >= steps:
-                    break
-                if crash_at is not None and step == crash_at:
-                    raise RuntimeError(f"injected failure at step {step}")
-                batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                params, opt_state, metrics = self._jitted(
-                    params, opt_state, batch, jnp.asarray(step, jnp.int32))
-                loss = float(metrics["loss"])
-                losses.append(loss)
-                if step % self.tc.log_every == 0:
-                    print(f"[train] step {step} loss {loss:.4f} "
-                          f"lr {float(metrics['lr']):.2e} "
-                          f"gnorm {float(metrics['grad_norm']):.3f}",
-                          flush=True)
-                if (step + 1) % self.tc.checkpoint_every == 0:
-                    self.ckpt.save(step + 1,
-                                   {"params": params, "opt": opt_state})
-        self.ckpt.wait()
+            try:
+                for i, batch in enumerate(batches):
+                    step = start + i
+                    if step >= steps:
+                        break
+                    if crash_at is not None and step == crash_at:
+                        raise RuntimeError(f"injected failure at step {step}")
+                    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+                    params, opt_state, metrics = self._jitted(
+                        params, opt_state, batch, jnp.asarray(step, jnp.int32))
+                    loss = float(metrics["loss"])
+                    losses.append(loss)
+                    if step % self.tc.log_every == 0:
+                        print(f"[train] step {step} loss {loss:.4f} "
+                              f"lr {float(metrics['lr']):.2e} "
+                              f"gnorm {float(metrics['grad_norm']):.3f}",
+                              flush=True)
+                    if (step + 1) % self.tc.checkpoint_every == 0:
+                        self.ckpt.save(step + 1,
+                                       {"params": params, "opt": opt_state})
+            finally:
+                # crash consistency: an async save started before a crash
+                # must be durable before the failure propagates, or the
+                # resume path would silently restart from an older step
+                self.ckpt.wait()
         return TrainResult(len(losses), losses[-1] if losses else float("nan"),
                            losses, resumed_from, time.time() - t0)
 

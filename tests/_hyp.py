@@ -1,0 +1,69 @@
+"""Optional-hypothesis shim: real property testing when `hypothesis` is
+installed, a deterministic fixed-example fallback when it is not (the
+bare dry-run container has no hypothesis, and the tier-1 suite must
+still run there).
+
+Usage in tests:
+
+    from _hyp import given, settings, st
+
+The fallback implements just the strategy surface this repo uses
+(integers / sampled_from / lists / tuples) and runs each ``@given`` test
+over a fixed number of seeded random examples — weaker than hypothesis
+(no shrinking, no example database) but the same invariants get
+exercised.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+    import numpy as _np
+
+    _FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _sampled_from(elements):
+        els = list(elements)
+        return _Strategy(lambda rng: els[int(rng.integers(len(els)))])
+
+    def _lists(elements, min_size=0, max_size=None):
+        cap = 10 if max_size is None else max_size
+        return _Strategy(lambda rng: [
+            elements.draw(rng)
+            for _ in range(int(rng.integers(min_size, cap + 1)))])
+
+    def _tuples(*els):
+        return _Strategy(lambda rng: tuple(e.draw(rng) for e in els))
+
+    class st:                                        # noqa: N801
+        integers = staticmethod(_integers)
+        sampled_from = staticmethod(_sampled_from)
+        lists = staticmethod(_lists)
+        tuples = staticmethod(_tuples)
+
+    def given(*gargs, **gkw):
+        def deco(fn):
+            # deliberately *not* functools.wraps: pytest must see a
+            # zero-arg callable, not the strategy-filled signature
+            def runner():
+                rng = _np.random.default_rng(0xBA1B0A)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    fn(*[s.draw(rng) for s in gargs],
+                       **{k: s.draw(rng) for k, s in gkw.items()})
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco
+
+    def settings(*args, **kwargs):
+        if args and callable(args[0]):               # bare @settings
+            return args[0]
+        return lambda fn: fn

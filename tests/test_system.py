@@ -137,15 +137,20 @@ def test_dlrm_trains():
     batch = {"dense": jnp.asarray(dense), "sparse": jnp.asarray(sparse),
              "label": jnp.asarray(labels)}
 
+    # heavy-ball momentum: plain constant-step GD oscillates around the
+    # optimum on this full-batch problem instead of settling
+    vel = jax.tree.map(jnp.zeros_like, params)
+
     @jax.jit
-    def step(p):
+    def step(p, v):
         (l, m), g = jax.value_and_grad(model.loss, has_aux=True)(p, batch)
-        p = jax.tree.map(lambda a, b: a - 0.05 * b, p, g)
-        return p, l, m["acc"]
+        v = jax.tree.map(lambda vv, gg: 0.9 * vv + gg, v, g)
+        p = jax.tree.map(lambda a, b: a - 0.005 * b, p, v)
+        return p, v, l, m["acc"]
 
     accs = []
     for _ in range(200):
-        params, loss, acc = step(params)
+        params, vel, loss, acc = step(params, vel)
         accs.append(float(acc))
     assert accs[-1] > 0.8, f"DLRM failed to learn: acc={accs[-1]}"
 

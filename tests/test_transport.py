@@ -4,7 +4,7 @@ and RX pipeline PSN semantics."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import packet as pk
 from repro.core import pipeline as pipe
