@@ -1,8 +1,9 @@
-"""Paper Fig. 6 analogue: multi-QP scaling, fairness, and incast.
+"""Paper Fig. 6 analogue: multi-QP scaling, fairness, incast, and the
+ECN/DCQCN congestion-control comparison.
 
-Three experiments:
+Four experiments:
 
-1. **Scaling sweep** (the PR's acceptance metric): aggregate RX-pipeline
+1. **Scaling sweep** (PR 1's acceptance metric): aggregate RX-pipeline
    throughput (packets/sec) vs. QP count, 1 -> 512, for the per-packet
    scan oracle and the batched multi-QP engine on identical traces.
    The oracle's sequential depth is the batch size; the batched engine's
@@ -17,8 +18,20 @@ Three experiments:
 3. **Incast**: N senders converge on one switch port (shared egress
    queue, drop-tail).  Reports goodput, tail drops and retransmissions
    — the congestion scenario the point-to-point model could not express.
+
+4. **Incast CC sweep** (PR 2's acceptance metric): the same incast, CC
+   off (``ack_clocked``) vs on (``dcqcn``), over growing fan-in, on an
+   *identical* ECN-marking fabric (the off arm simply ignores CNPs).
+   Asserts that at 8:1 DCQCN gives strictly fewer drop-tail drops and
+   >= 1.3x goodput.
+
+``--smoke`` runs a tiny CC sweep only (the CI bench job); ``--json P``
+writes all results to ``P`` for the bench trajectory.
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import numpy as np
 import jax.numpy as jnp
@@ -27,11 +40,16 @@ from benchmarks._util import emit, time_fn
 from repro.core import packet as pk
 from repro.core import pipeline as pipe
 from repro.core.netsim import (FabricConfig, LinkConfig, Network,
-                               incast_scenario)
+                               dcqcn_fabric_profile, incast_scenario)
 from repro.core.rdma import RdmaNode, run_network
 
 SWEEP_QPS = (1, 4, 16, 64, 256, 512)
 SWEEP_BATCH = 4096
+
+# one fabric for both CC arms: shallow enough that an 8x window
+# oversubscription genuinely congests, ECN thresholds the ack_clocked
+# arm simply never reacts to
+CC_FABRIC = dcqcn_fabric_profile()
 
 
 def _trace_batch(n_qps: int, n_pkts: int, seed: int = 0):
@@ -116,14 +134,87 @@ def incast(n_senders: int = 8, message_bytes: int = 32768):
         message_bytes), "incast lost data"
 
 
-def main():
-    sweep()
-    for n in (2, 4, 8, 16):
-        per_qp, cv = fairness(n)
-        emit(f"fig6_multiqp_{n}qps", 0.0,
-             f"cv={cv:.4f};bytes_per_qp={int(per_qp.mean())}")
-        assert cv < 0.05, f"unfair arbitration across {n} QPs: cv={cv}"
-    incast()
+def _incast_cc_arm(n_senders: int, message_bytes: int, cc: str) -> dict:
+    res = incast_scenario(n_senders, message_bytes=message_bytes,
+                          fabric_cfg=CC_FABRIC, congestion_control=cc)
+    hot = res.fabric.port_stats[0]
+    line = CC_FABRIC.port_bandwidth * pk.MTU        # payload B/tick
+    goodput = n_senders * message_bytes / max(res.ticks, 1)
+    assert res.receiver.stats.accepted == sum(
+        pk.read_resp_npkts(len(d)) for d in res.payloads), \
+        f"incast ({cc}) lost data"
+    return {
+        "cc": cc, "fan_in": n_senders, "message_bytes": message_bytes,
+        "ticks": res.ticks, "goodput_B_per_tick": round(goodput, 2),
+        "utilization": round(goodput / line, 4),
+        "tail_dropped": hot.tail_dropped,
+        "ecn_marked": hot.ecn_marked,
+        "max_queue": hot.max_depth,
+        "retransmissions": sum(s.stats.retransmissions
+                               for s in res.senders),
+        "cnp_tx": res.receiver.stats.cnp_tx,
+        "cnp_rx": sum(s.stats.cnp_rx for s in res.senders),
+        "qp_deaths": sum(len(s.retx.exhausted) for s in res.senders),
+    }
+
+
+def incast_cc_sweep(fan_ins=(2, 4, 8, 16), message_bytes: int = 1 << 20,
+                    check: bool = True) -> list:
+    """CC off vs on over growing fan-in (the PR's acceptance sweep)."""
+    results = []
+    for n in fan_ins:
+        off = _incast_cc_arm(n, message_bytes, "ack_clocked")
+        on = _incast_cc_arm(n, message_bytes, "dcqcn")
+        results += [off, on]
+        gain = on["goodput_B_per_tick"] / max(off["goodput_B_per_tick"], 1e-9)
+        emit(f"fig6_incast_cc_{n}to1", 0.0,
+             f"off_drops={off['tail_dropped']};on_drops={on['tail_dropped']};"
+             f"off_util={off['utilization']:.3f};"
+             f"on_util={on['utilization']:.3f};goodput_gain={gain:.2f}x;"
+             f"on_cnps={on['cnp_rx']}")
+        if check and n >= 8:
+            assert on["tail_dropped"] < off["tail_dropped"], (
+                f"{n}:1 incast: DCQCN should drop strictly less "
+                f"({on['tail_dropped']} vs {off['tail_dropped']})")
+            assert gain >= 1.3, (
+                f"{n}:1 incast: DCQCN goodput gain {gain:.2f}x < 1.3x")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CC sweep only (CI bench job)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write results as JSON to PATH")
+    args = ap.parse_args(argv)
+
+    results = {"mode": "smoke" if args.smoke else "full"}
+    if args.smoke:
+        results["incast_cc"] = incast_cc_sweep(
+            fan_ins=(2, 8), message_bytes=65536, check=False)
+        # the headline property must hold even at smoke scale: CC on
+        # never drops more than CC off at 8:1
+        by = {(r["fan_in"], r["cc"]): r for r in results["incast_cc"]}
+        assert by[(8, "dcqcn")]["tail_dropped"] <= \
+            by[(8, "ack_clocked")]["tail_dropped"], "smoke: DCQCN regressed"
+    else:
+        results["sweep_speedup"] = {str(k): round(v, 2)
+                                    for k, v in sweep().items()}
+        fair = {}
+        for n in (2, 4, 8, 16):
+            per_qp, cv = fairness(n)
+            emit(f"fig6_multiqp_{n}qps", 0.0,
+                 f"cv={cv:.4f};bytes_per_qp={int(per_qp.mean())}")
+            assert cv < 0.05, f"unfair arbitration across {n} QPs: cv={cv}"
+            fair[str(n)] = round(float(cv), 5)
+        results["fairness_cv"] = fair
+        incast()
+        results["incast_cc"] = incast_cc_sweep()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,20 @@
-"""ACK-clocked flow control (paper §4.4) and RX crediting (§4.3).
+"""ACK-clocked flow control (paper §4.4), RX crediting (§4.3), and the
+DCQCN reaction point (the congestion-control plane the paper's "open
+design space" pitch points at).
 
 Flow control sits on the *control path*: an outgoing request either
 passes to the packet pipeline or is queued, bounded by a per-QP budget of
 outstanding packets.  The budget is decreased by passing requests and
 increased by incoming ACKs — "ACK-clocked", compatible with commodity
 NICs, and the hook point for DCQCN/TIMELY-style congestion control.
+That hook is now filled: with ``congestion_control="dcqcn"`` a
+``DcqcnRateController`` paces the pending-queue drain through a per-QP
+token bucket whose fill rate follows the DCQCN RP state machine —
+multiplicative decrease on CNP arrival, timer-driven fast recovery /
+additive increase between CNPs (Zhu et al., SIGCOMM'15).  The ACK clock
+still bounds *inflight* packets; the rate controller bounds *departure
+rate*, which is what keeps shallow switch queues below their ECN
+thresholds instead of oscillating off drop-tail losses.
 
 Crediting guards the *receive* side: the host-facing datapath advertises
 consumption capacity; packets arriving with no credit available are
@@ -32,19 +42,149 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
+class DcqcnConfig:
+    """DCQCN reaction-point parameters, in simulator units (packets per
+    tick / ticks).  Defaults are scaled for the switched-fabric testbed
+    (port bandwidth ~4 pkts/tick, RTT ~6-10 ticks)."""
+    line_rate: float = 4.0           # max rate per QP (pkts/tick)
+    min_rate: float = 0.05           # rate floor (pkts/tick)
+    g: float = 1.0 / 16.0            # EWMA gain of the alpha estimator
+    rate_ai: float = 0.2             # additive increase per timer event
+    alpha_timer: int = 32            # ticks w/o CNP before alpha decays
+    rate_timer: int = 16             # ticks between rate-increase events
+    fast_recovery: int = 3           # half-the-gap stages before AI
+    # Starting rate of a fresh QP.  Spec DCQCN starts at line rate and
+    # relies on PFC to make the first-RTT incast burst lossless; this
+    # fabric models no PFC, so flows may start below line rate and let
+    # fast recovery / AI climb instead of blasting into a shallow queue
+    # blind.  ``None`` = line_rate (spec-faithful).
+    initial_rate: Optional[float] = None
+
+
+@dataclasses.dataclass
 class FlowControlConfig:
     window: int = 64                 # max outstanding packets per QP
-    congestion_control: str = "ack_clocked"   # | "static"
+    congestion_control: str = "ack_clocked"   # | "static" | "dcqcn"
+    dcqcn: DcqcnConfig = dataclasses.field(default_factory=DcqcnConfig)
+
+
+class DcqcnRateController:
+    """Per-QP DCQCN RP state machine + token-bucket pacer.
+
+    State per QP (lazily activated on first request so idle QPs cost
+    nothing on the tick path): current rate Rc, target rate Rt, the
+    congestion estimate alpha, the increase-stage counter, and the token
+    bucket the flow-control drain spends from.
+
+    Rate dynamics (Zhu et al., SIGCOMM'15, timer-driven variant):
+      * CNP arrival:  Rt <- Rc;  Rc <- max(Rmin, Rc * (1 - alpha/2));
+                      alpha <- (1-g)*alpha + g;  stage <- 0
+      * every ``rate_timer`` ticks without a cut:
+          stage < fast_recovery:  Rc <- (Rc + Rt) / 2       (fast recovery)
+          else:                   Rt <- min(line, Rt + Rai);
+                                  Rc <- (Rc + Rt) / 2       (additive inc.)
+      * every ``alpha_timer`` ticks without a CNP:
+          alpha <- (1-g) * alpha
+
+    Invariants (property-tested in tests/test_congestion.py):
+      min_rate <= rate(qp) <= line_rate at every point in time.
+    """
+
+    def __init__(self, n_qps: int, cfg: DcqcnConfig = DcqcnConfig(), *,
+                 burst: float = 8.0):
+        self.cfg = cfg
+        self.n_qps = n_qps
+        self.burst = max(burst, 1.0)
+        r0 = cfg.line_rate if cfg.initial_rate is None else \
+            min(cfg.line_rate, max(cfg.min_rate, cfg.initial_rate))
+        self.rate = [r0] * n_qps
+        self.target = [r0] * n_qps
+        self.alpha = [1.0] * n_qps
+        self.stage = [0] * n_qps
+        # buckets start near-empty: send-time bursts are budgeted by the
+        # ACK window, not by a pre-filled bucket, so pacing engages from
+        # the very first request instead of after one bucket's worth
+        self.tokens = [1.0] * n_qps
+        self._last_cut = [0] * n_qps         # last CNP / alpha-update tick
+        self._last_inc = [0] * n_qps         # last rate-increase tick
+        self._last_tick_now = -1
+        self._active: set = set()
+        # telemetry
+        self.cnps_handled = 0
+        self.rate_cuts = 0
+        self.rate_increases = 0
+
+    def activate(self, qpn: int, now: int = 0):
+        if qpn not in self._active:
+            self._active.add(qpn)
+            self._last_cut[qpn] = now
+            self._last_inc[qpn] = now
+
+    def on_cnp(self, qpn: int, now: int):
+        """Multiplicative decrease at the reaction point.  Called from
+        the CNP control path — never from the ACK path, so a CNP cannot
+        release ACK-clocked budget (CNPs don't ACK data)."""
+        self.activate(qpn, now)
+        c = self.cfg
+        self.target[qpn] = self.rate[qpn]
+        self.rate[qpn] = max(c.min_rate,
+                             self.rate[qpn] * (1.0 - self.alpha[qpn] / 2.0))
+        self.alpha[qpn] = min(1.0, (1.0 - c.g) * self.alpha[qpn] + c.g)
+        self.stage[qpn] = 0
+        self._last_cut[qpn] = now
+        self._last_inc[qpn] = now
+        self.cnps_handled += 1
+        self.rate_cuts += 1
+
+    def tick(self, now: int):
+        """Advance timers and accrue send tokens for active QPs.
+        Idempotent per tick, so pacing consumers (staged retransmits,
+        flow-control drain) may each poke it safely."""
+        if now == self._last_tick_now:
+            return
+        self._last_tick_now = now
+        c = self.cfg
+        for qpn in sorted(self._active):
+            if now - self._last_cut[qpn] >= c.alpha_timer:
+                self.alpha[qpn] = (1.0 - c.g) * self.alpha[qpn]
+                self._last_cut[qpn] = now
+            if now - self._last_inc[qpn] >= c.rate_timer:
+                self._last_inc[qpn] = now
+                if self.stage[qpn] >= c.fast_recovery:
+                    self.target[qpn] = min(c.line_rate,
+                                           self.target[qpn] + c.rate_ai)
+                self.rate[qpn] = min(c.line_rate,
+                                     (self.rate[qpn] + self.target[qpn]) / 2)
+                self.stage[qpn] += 1
+                self.rate_increases += 1
+            self.tokens[qpn] = min(self.burst,
+                                   self.tokens[qpn] + self.rate[qpn])
+
+    def take(self, qpn: int, n_pkts: int) -> bool:
+        """Spend ``n_pkts`` tokens if available (the pacing gate)."""
+        if self.tokens[qpn] >= n_pkts:
+            self.tokens[qpn] -= n_pkts
+            return True
+        return False
 
 
 class AckClockedFlowControl:
-    """Per-QP outstanding-packet ledger with a pending queue."""
+    """Per-QP outstanding-packet ledger with a pending queue.  With
+    ``congestion_control="dcqcn"`` the drain is additionally gated by the
+    rate controller's token bucket (rate-paced instead of burst-at-
+    window)."""
 
     def __init__(self, n_qps: int, cfg: FlowControlConfig = FlowControlConfig()):
         self.cfg = cfg
         self.budget = [cfg.window] * n_qps
         self.pending: List[Deque] = [collections.deque() for _ in range(n_qps)]
         self.outstanding = [0] * n_qps
+        self.rate: Optional[DcqcnRateController] = None
+        if cfg.congestion_control == "dcqcn":
+            # the bucket must admit the largest request the window can
+            # pass, or pacing would deadlock the head of the queue
+            self.rate = DcqcnRateController(n_qps, cfg.dcqcn,
+                                            burst=float(cfg.window))
         # telemetry
         self.total_passed = 0
         self.total_queued = 0
@@ -53,6 +193,8 @@ class AckClockedFlowControl:
         """Submit a request of ``n_pkts`` packets.  Returns the list of
         requests (the given one and/or previously queued ones) that pass
         to the packet pipeline now."""
+        if self.rate is not None:
+            self.rate.activate(qpn)
         self.pending[qpn].append((n_pkts, payload))
         self.total_queued += 1
         return self._drain(qpn)
@@ -64,10 +206,38 @@ class AckClockedFlowControl:
                                self.budget[qpn] + n_pkts)
         return self._drain(qpn)
 
+    def on_cnp(self, qpn: int, now: int):
+        """Congestion notification: cut the QP's rate.  Deliberately does
+        NOT touch budget/outstanding — a CNP never ACKs data."""
+        if self.rate is not None:
+            self.rate.on_cnp(qpn, now)
+
+    def tick_rate(self, now: int):
+        """Advance the rate controller (timers + token accrual) without
+        draining.  Lets the node spend tokens on staged retransmissions
+        before the pending queue competes for them."""
+        if self.rate is not None:
+            self.rate.tick(now)
+
+    def tick(self, now: int) -> List[Tuple[int, Tuple]]:
+        """Rate-paced drain: accrue tokens, then release whatever the
+        refreshed buckets admit.  Returns ``(qpn, (n_pkts, payload))``
+        pairs.  No-op (empty) under plain ACK clocking."""
+        if self.rate is None:
+            return []
+        self.rate.tick(now)
+        released = []
+        for qpn in sorted(self.rate._active):
+            if self.pending[qpn]:
+                released.extend((qpn, item) for item in self._drain(qpn))
+        return released
+
     def _drain(self, qpn: int) -> List:
         passed = []
         q = self.pending[qpn]
         while q and q[0][0] <= self.budget[qpn]:
+            if self.rate is not None and not self.rate.take(qpn, q[0][0]):
+                break                      # paced: wait for tokens
             n_pkts, payload = q.popleft()
             self.budget[qpn] -= n_pkts
             self.outstanding[qpn] += n_pkts

@@ -102,9 +102,11 @@ class BalboaIngest:
                 raw = self.trainer._qp_buffer[qpn_l][1][:nbytes]
                 host_batch = self.decode_fn(raw.copy())
                 return self._to_device(host_batch)
-            # straggler / dead peer: re-establish and try the replica
+            # straggler / dead peer: re-establish (clears the errored
+            # QP's retransmit ring + flow-control queue via
+            # qp.reestablish) and try the replica
             self.refetches += 1
-            self.trainer.qp.reestablish(qpn_l)
+            self.trainer.reestablish_qp(qpn_l)
         raise RuntimeError(f"shard {index}: all replicas failed")
 
     def _to_device(self, host_batch: Dict[str, np.ndarray]):

@@ -23,7 +23,12 @@ Two topologies:
                      port's bandwidth.  This is where incast lives: N
                      senders converging on one receiver overflow that
                      receiver's egress queue exactly like a real
-                     shallow-buffered ToR switch.
+                     shallow-buffered ToR switch.  With ``ecn_kmin`` /
+                     ``ecn_kmax`` configured, the switch additionally
+                     plays the DCQCN congestion-point role: packets are
+                     CE-marked (RED-style, at dequeue) instead of only
+                     tail-dropped, feeding the CNP/rate-control loop in
+                     ``flow_control`` / ``rdma``.
 
 Both expose the same surface (``send`` / ``tick`` / ``quiescent`` /
 ``now``) so ``RdmaNode`` and ``run_network`` work with either.
@@ -129,11 +134,24 @@ def _per_port(value: Union[int, Sequence[int]], n_ports: int) -> List[int]:
 @dataclasses.dataclass
 class FabricConfig:
     """Single-switch star fabric.  ``port_bandwidth`` and ``port_delay``
-    accept either a scalar (all ports alike) or a per-port sequence."""
+    accept either a scalar (all ports alike) or a per-port sequence.
+
+    ECN marking (RED-style, the DCQCN congestion-point role): a packet
+    leaving an egress queue whose remaining depth exceeds ``ecn_kmin``
+    is CE-marked with probability ramping linearly up to ``ecn_pmax``
+    at ``ecn_kmax``; at or above ``ecn_kmax`` every departure is
+    marked.  Marking happens at *dequeue*, so the mark reaches the
+    receiver after only the wire delay — not after the packet's own
+    queue sojourn.  ``ecn_kmax = 0`` (default) disables marking
+    entirely — the fabric then only tail-drops, exactly the pre-ECN
+    behaviour."""
     port_bandwidth: Union[int, Sequence[int]] = 4   # egress pkts per tick
     port_delay: Union[int, Sequence[int]] = 2       # ingress wire latency
     queue_capacity: int = 64                        # egress drop-tail depth
     loss_prob: float = 0.0                          # random wire loss
+    ecn_kmin: int = 0                               # CE-mark ramp start
+    ecn_kmax: int = 0                               # CE-mark saturation (0=off)
+    ecn_pmax: float = 1.0                           # mark prob at kmax
     seed: int = 0
 
 
@@ -143,6 +161,7 @@ class PortStats:
     delivered: int = 0
     tail_dropped: int = 0        # drop-tail at the egress queue
     wire_dropped: int = 0        # random loss on the ingress wire
+    ecn_marked: int = 0          # CE marks applied at this egress queue
     max_depth: int = 0           # high-water mark of the egress queue
 
 
@@ -202,11 +221,36 @@ class SwitchedFabric:
             q = self.egress[dst]
             if not q:
                 continue
-            batch = [q.popleft()
-                     for _ in range(min(self.bandwidth[dst], len(q)))]
-            self.port_stats[dst].delivered += len(batch)
+            st = self.port_stats[dst]
+            batch = []
+            for _ in range(min(self.bandwidth[dst], len(q))):
+                # mark at DEQUEUE: the CE bit reflects the depth the
+                # packet leaves behind and reaches the receiver after
+                # only the wire delay, not after its own queue sojourn —
+                # the tight feedback loop DCQCN's stability relies on
+                if self._ecn_mark(len(q)):
+                    q[0].ecn = True
+                    st.ecn_marked += 1
+                batch.append(q.popleft())
+            st.delivered += len(batch)
             out[(-1, dst)] = batch
         return out
+
+    def _ecn_mark(self, depth: int) -> bool:
+        """RED-style marking decision for a dequeue leaving ``depth``
+        packets behind it (including itself).  Only draws randomness
+        inside the [kmin, kmax) ramp, so configurations without ECN
+        replay the exact same rng stream as before."""
+        kmax = self.cfg.ecn_kmax
+        if kmax <= 0:
+            return False
+        if depth >= kmax:
+            return True
+        kmin = self.cfg.ecn_kmin
+        if depth <= kmin:
+            return False
+        prob = self.cfg.ecn_pmax * (depth - kmin) / max(kmax - kmin, 1)
+        return bool(self.rng.random() < prob)
 
     def quiescent(self) -> bool:
         return not self._wire and all(not q for q in self.egress)
@@ -219,6 +263,21 @@ class SwitchedFabric:
     @property
     def total_delivered(self) -> int:
         return sum(s.delivered for s in self.port_stats)
+
+    @property
+    def total_ecn_marked(self) -> int:
+        return sum(s.ecn_marked for s in self.port_stats)
+
+
+def dcqcn_fabric_profile() -> FabricConfig:
+    """The calibrated ECN-marking fabric for DCQCN experiments (swept in
+    benchmarks/fig6_multiqp.py): mark lightly from Kmin=8, saturate at
+    Kmax=24, keep half the drop-tail headroom above Kmax to absorb AI
+    overshoot between CNPs.  The single source of truth — the incast
+    default, the CC bench and the acceptance tests all measure this
+    exact profile."""
+    return FabricConfig(port_bandwidth=4, port_delay=2, queue_capacity=48,
+                        ecn_kmin=8, ecn_kmax=24, ecn_pmax=0.05, seed=7)
 
 
 @dataclasses.dataclass
@@ -234,19 +293,37 @@ def incast_scenario(n_senders: int, *, message_bytes: int = 65536,
                     fabric_cfg: Optional[FabricConfig] = None,
                     rx_credits: int = 64, fc_window: int = 16,
                     max_ticks: int = 300_000,
-                    engine: str = "batched") -> IncastResult:
+                    engine: str = "batched",
+                    congestion_control: str = "ack_clocked") -> IncastResult:
     """The canonical congestion scenario: ``n_senders`` nodes RDMA-WRITE
     simultaneously into one receiver through a shallow-buffered switch
     port.  Runs until the fabric drains — callers assert delivery and
     inspect drop/retransmit stats.
-    """
-    from repro.core.rdma import RdmaNode, run_network   # cycle-free import
 
-    cfg = fabric_cfg or FabricConfig(port_bandwidth=4, port_delay=2,
-                                     queue_capacity=32, seed=7)
+    ``congestion_control="dcqcn"`` arms the full ECN loop: the default
+    fabric config then CE-marks above Kmin (unless an explicit
+    ``fabric_cfg`` overrides it) and every sender runs the DCQCN
+    reaction point, so drop-tail losses give way to rate convergence.
+    """
+    from repro.core.flow_control import DcqcnConfig     # cycle-free import
+    from repro.core.rdma import RdmaNode, run_network
+
+    if fabric_cfg is not None:
+        cfg = fabric_cfg
+    elif congestion_control == "dcqcn":
+        cfg = dcqcn_fabric_profile()
+    else:
+        cfg = FabricConfig(port_bandwidth=4, port_delay=2,
+                           queue_capacity=32, seed=7)
     fabric = SwitchedFabric(n_senders + 1, cfg)
+    # the reaction point's line rate is the hot port's drain rate; flows
+    # start at a quarter of it — the fabric models no PFC, so a blind
+    # first-RTT burst at line rate would only be drop-tail carnage
+    line = float(_per_port(cfg.port_bandwidth, n_senders + 1)[0])
+    dcqcn = DcqcnConfig(line_rate=line, initial_rate=line / 4)
     recv = RdmaNode(0, fabric, rx_credits=rx_credits, engine=engine)
-    senders = [RdmaNode(i + 1, fabric, fc_window=fc_window, engine=engine)
+    senders = [RdmaNode(i + 1, fabric, fc_window=fc_window, engine=engine,
+                        congestion_control=congestion_control, dcqcn=dcqcn)
                for i in range(n_senders)]
     rng = np.random.default_rng(13)
     work = []

@@ -28,13 +28,14 @@ READ_RESP_LAST = 0x0F
 READ_RESP_ONLY = 0x10
 ACK = 0x11
 NAK = 0x31          # we fold the NAK syndrome into its own opcode
+CNP = 0x81          # RoCE v2 congestion notification packet (DCQCN NP->RP)
 
 OPCODE_NAMES = {
     WRITE_FIRST: "WRITE_FIRST", WRITE_MIDDLE: "WRITE_MIDDLE",
     WRITE_LAST: "WRITE_LAST", WRITE_ONLY: "WRITE_ONLY",
     READ_REQUEST: "READ_REQUEST", READ_RESP_FIRST: "READ_RESP_FIRST",
     READ_RESP_MIDDLE: "READ_RESP_MIDDLE", READ_RESP_LAST: "READ_RESP_LAST",
-    READ_RESP_ONLY: "READ_RESP_ONLY", ACK: "ACK", NAK: "NAK",
+    READ_RESP_ONLY: "READ_RESP_ONLY", ACK: "ACK", NAK: "NAK", CNP: "CNP",
 }
 
 WRITE_OPS = (WRITE_FIRST, WRITE_MIDDLE, WRITE_LAST, WRITE_ONLY)
@@ -80,6 +81,10 @@ class Packet:
     icrc: int = 0
     # DPI decision flag travels with the host-directed command (§5.1.2)
     dpi_flag: bool = False
+    # IP ECN field: True = Congestion Experienced (CE).  Set by the
+    # switch when an egress queue crosses its Kmin/Kmax marking
+    # thresholds; echoed by the receiver as a CNP (DCQCN NP role).
+    ecn: bool = False
 
     @property
     def payload_len(self) -> int:
@@ -105,6 +110,7 @@ def batch_from_packets(pkts, mtu: int = MTU) -> Dict[str, np.ndarray]:
         "rkey": np.zeros(n, np.int32),
         "dma_len": np.zeros(n, np.int32),
         "ack_psn": np.zeros(n, np.int32),
+        "ecn": np.zeros(n, np.int32),
         "plen": np.zeros(n, np.int32),
         "payload": np.zeros((n, mtu), np.uint8),
         "valid": np.ones(n, np.int32),
@@ -118,6 +124,7 @@ def batch_from_packets(pkts, mtu: int = MTU) -> Dict[str, np.ndarray]:
         out["rkey"][i] = p.rkey
         out["dma_len"][i] = p.dma_len
         out["ack_psn"][i] = p.ack_psn
+        out["ecn"][i] = int(p.ecn)
         if p.payload is not None:
             out["plen"][i] = p.payload.size
             out["payload"][i, :p.payload.size] = p.payload
@@ -163,6 +170,13 @@ def make_read_request(qpn: int, psn: int, vaddr: int, rkey: int,
 def make_ack(qpn: int, ack_psn: int, msn: int = 0, nak: bool = False) -> Packet:
     return Packet(opcode=NAK if nak else ACK, qpn=qpn,
                   psn=ack_psn & PSN_MASK, ack_psn=ack_psn & PSN_MASK, msn=msn)
+
+
+def make_cnp(qpn: int, src_ip: int = 0, dst_ip: int = 0) -> Packet:
+    """Congestion notification (DCQCN NP -> RP).  Pure control signal:
+    carries no PSN/AETH state on purpose — a CNP must never advance
+    cumulative-ACK state at the reaction point."""
+    return Packet(opcode=CNP, qpn=qpn, src_ip=src_ip, dst_ip=dst_ip)
 
 
 def read_resp_npkts(length: int, mtu: int = MTU) -> int:

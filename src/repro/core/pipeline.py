@@ -70,6 +70,8 @@ class RxResult(NamedTuple):
     ack_qpn: jax.Array     # (N,) int32
     send_ack: jax.Array    # (N,) bool
     send_nak: jax.Array    # (N,) bool
+    ecn_echo: jax.Array    # (N,) bool   CE-marked payload arrival (NP input)
+    ecn_cnt: jax.Array     # (Q,) int32  CE-marked arrivals per QP this batch
 
 
 # ---------------------------------------------------------------------------
@@ -135,12 +137,17 @@ def _rx_decide(state: Dict[str, jax.Array], p: Dict[str, jax.Array]
         "send_ack": (accept & (is_last | (p["ack_req"] > 0))) |
                     (dup & is_payload),
         "send_nak": ooo & is_payload,
+        # ECN echo (DCQCN NP, §"opening the CC design space"): a CE mark
+        # is congestion evidence regardless of the PSN verdict — dups and
+        # credit-dropped packets crossed the congested queue too — so the
+        # echo is stateless: every valid CE-marked payload packet counts.
+        "ecn_echo": (p["ecn"] > 0) & is_payload & (p["valid"] > 0),
     }
     return new_state, out
 
 
 _PKT_FIELDS = ("qpn", "opcode", "psn", "plen", "vaddr", "dma_len", "ack_req",
-               "valid")
+               "ecn", "valid")
 _STATE_FIELDS = ("epsn", "msn", "bytes_left", "cur_vaddr", "credits")
 
 
@@ -155,19 +162,34 @@ def _rx_one(tables: RxTables, p) -> Tuple[RxTables, Dict]:
     return tables, out
 
 
+def _ensure_ecn(batch: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Batches built before the ECN era lack the CE column; default it
+    to not-marked (trace-time branch, free under jit)."""
+    if "ecn" in batch:
+        return batch
+    return dict(batch, ecn=jnp.zeros(batch["qpn"].shape[0], jnp.int32))
+
+
 @jax.jit
 def rx_pipeline(tables: RxTables, batch: Dict[str, jax.Array]
                 ) -> Tuple[RxTables, RxResult]:
     """Per-packet oracle: scan the RX FSM over the batch in arrival
     order.  O(N) sequential steps — kept as the reference semantics the
     batched engine must reproduce bit-for-bit."""
+    batch = _ensure_ecn(batch)
+
     def body(t, i):
         p = {k: batch[k][i] for k in _PKT_FIELDS}
         t, out = _rx_one(t, p)
         return t, out
 
     n = batch["qpn"].shape[0]
+    n_qps = tables.epsn.shape[0]
     tables, outs = jax.lax.scan(body, tables, jnp.arange(n))
+    # per-QP CE tally (the NP-side congestion signal); the oracle is
+    # allowed the naive scatter-add the batched engine avoids
+    outs["ecn_cnt"] = jnp.zeros(n_qps, jnp.int32).at[batch["qpn"]].add(
+        outs["ecn_echo"].astype(jnp.int32), mode="drop")
     return tables, RxResult(**{k: outs[k] for k in RxResult._fields})
 
 
@@ -176,9 +198,10 @@ def rx_pipeline(tables: RxTables, batch: Dict[str, jax.Array]
 # ---------------------------------------------------------------------------
 
 _OUT_KEYS = ("accept", "dup", "ooo", "dropped_credit", "dma_addr",
-             "dma_len", "ack_psn", "ack_qpn", "send_ack", "send_nak")
+             "dma_len", "ack_psn", "ack_qpn", "send_ack", "send_nak",
+             "ecn_echo")
 _OUT_BOOL = ("accept", "dup", "ooo", "dropped_credit", "send_ack",
-             "send_nak")
+             "send_nak", "ecn_echo")
 
 
 @jax.jit
@@ -214,6 +237,7 @@ def rx_pipeline_batched(tables: RxTables, batch: Dict[str, jax.Array]
     independent, so cross-QP reordering cannot change any decision);
     invalid (padding) lanes yield all-zero outputs.
     """
+    batch = _ensure_ecn(batch)
     n = batch["qpn"].shape[0]
     n_qps = tables.epsn.shape[0]
     w = min(n_qps, n)                       # static wave width
@@ -304,6 +328,16 @@ def rx_pipeline_batched(tables: RxTables, batch: Dict[str, jax.Array]
     res = {}
     for i, k in enumerate(_OUT_KEYS):
         res[k] = unsorted[i] > 0 if k in _OUT_BOOL else unsorted[i]
+    # per-QP CE tally as a segmented reduction over the sorted (wave)
+    # layout: the CE echo is stateless, so it reads straight off the
+    # sorted header columns — one cumsum + a (Q,)-gather, no scatter
+    ecn_s = fmat[_PKT_FIELDS.index("ecn"), :n]
+    opc_s = fmat[_PKT_FIELDS.index("opcode"), :n]
+    flag = ((ecn_s > 0) & (sk < n_qps) &
+            jnp.isin(opc_s, jnp.asarray(pk.PAYLOAD_OPS, jnp.int32)))
+    csum = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                            jnp.cumsum(flag.astype(jnp.int32))])
+    res["ecn_cnt"] = (csum[bounds[1:]] - csum[bounds[:-1]]).astype(jnp.int32)
     return tables, RxResult(**{k: res[k] for k in RxResult._fields})
 
 

@@ -1,7 +1,10 @@
 """RDMA endpoint: the full BALBOA node (paper Fig. 1 & 3 wired together).
 
 One ``RdmaNode`` owns the QP manager, the jax RX/TX pipelines, ACK-clocked
-flow control, the retransmission buffer, RX crediting and the service
+flow control (optionally DCQCN rate-paced: the node plays the DCQCN NP
+role — in-graph CE detection, coalesced CNP emission — and RP role —
+CNP-driven rate cuts pacing both fresh traffic and staged go-back-N
+resends), the retransmission buffer, RX crediting and the service
 chain.  Nodes exchange packets over ``repro.core.netsim`` — either the
 point-to-point ``Network`` or the ``SwitchedFabric`` (shared egress
 queues, where incast congestion lives) — tests drive lossy links and
@@ -35,7 +38,7 @@ import numpy as np
 from repro.core import packet as pk
 from repro.core import pipeline as pipe
 from repro.core.flow_control import (AckClockedFlowControl, CreditManager,
-                                     FlowControlConfig)
+                                     DcqcnConfig, FlowControlConfig)
 from repro.core.qp import QPManager
 from repro.core.retransmit import RetransmissionBuffer
 from repro.core.services import ServiceChain
@@ -53,6 +56,12 @@ class NodeStats:
     credit_dropped: int = 0
     retransmissions: int = 0
     dpi_flagged: int = 0
+    ecn_marked_rx: int = 0       # CE-marked payload packets seen (NP)
+    cnp_tx: int = 0              # CNPs emitted (NP, after coalescing)
+    cnp_rx: int = 0              # CNPs received (RP)
+
+
+CONGESTION_CONTROLS = ("ack_clocked", "static", "dcqcn")
 
 
 class RdmaNode:
@@ -60,10 +69,16 @@ class RdmaNode:
                  n_qps: int = 500, mtu: int = pk.MTU,
                  fc_window: int = 64, rx_credits: int = 64,
                  services: Optional[ServiceChain] = None,
-                 sniffer=None, engine: str = "batched"):
+                 sniffer=None, engine: str = "batched",
+                 congestion_control: str = "ack_clocked",
+                 dcqcn: Optional[DcqcnConfig] = None):
         if engine not in pipe.RX_ENGINES:
             raise ValueError(f"unknown engine {engine!r}; "
                              f"choose from {sorted(pipe.RX_ENGINES)}")
+        if congestion_control not in CONGESTION_CONTROLS:
+            raise ValueError(
+                f"unknown congestion_control {congestion_control!r}; "
+                f"choose from {CONGESTION_CONTROLS}")
         self.node_id = node_id
         self.net = network                   # Network or SwitchedFabric
         self.engine = engine
@@ -72,17 +87,26 @@ class RdmaNode:
         self.qp = QPManager(n_qps, node_id)
         self.rx_tables = pipe.make_rx_tables(n_qps, rx_credits)
         self.tx_tables = pipe.make_tx_tables(n_qps)
-        self.fc = AckClockedFlowControl(n_qps, FlowControlConfig(fc_window))
+        self.fc = AckClockedFlowControl(n_qps, FlowControlConfig(
+            fc_window, congestion_control=congestion_control,
+            dcqcn=dcqcn if dcqcn is not None else DcqcnConfig()))
         self.credits = CreditManager(n_qps, rx_credits, rx_credits)
         self.retx = RetransmissionBuffer(timeout_ticks=64)
         self.services = services
         self.sniffer = sniffer
         self.stats = NodeStats()
+        self.qp_errors: set = set()                  # QPs dead on retry budget
+        self._exhausted_seen = 0                     # retx.exhausted cursor
         self._completions: Dict[int, int] = {}       # qpn -> completed msgs
         self._qp_buffer: Dict[int, Tuple[int, np.ndarray]] = {}
         self._peer: Dict[int, int] = {}              # qpn -> remote node id
         self._read_pending: Dict[int, int] = {}      # qpn -> bytes expected
         self._last_nak_resend: Dict[int, int] = {}   # qpn -> tick
+        self._last_cnp_sent: Dict[int, int] = {}     # qpn -> tick (coalescing)
+        # retransmissions awaiting pacing tokens (DCQCN only: the rate
+        # limiter sits at the wire, so resends are paced like first
+        # transmissions instead of bursting back into the hot queue)
+        self._retx_staged: Dict[int, List[pk.Packet]] = {}
 
     # ------------------------------------------------------------- verbs
     def init_rdma(self, max_size: int, remote: "RdmaNode",
@@ -190,6 +214,8 @@ class RdmaNode:
                 self._on_ack(p)
             elif p.opcode == pk.NAK:
                 self._on_nak(p)
+            elif p.opcode == pk.CNP:
+                self._on_cnp(p)
             elif p.opcode == pk.READ_REQUEST:
                 self._on_read_request(p)
             else:
@@ -214,8 +240,11 @@ class RdmaNode:
         self.rx_tables = self.rx_tables._replace(
             credits=jnp.asarray(self.credits.credits, jnp.int32))
         self.rx_tables, res = self._rx_pipe(self.rx_tables, batch)
-        res = {k: np.asarray(v)[:n] for k, v in res._asdict().items()}
+        res = res._asdict()
+        ecn_cnt = np.asarray(res.pop("ecn_cnt"))     # (Q,) per-QP CE tally
+        res = {k: np.asarray(v)[:n] for k, v in res.items()}
         self.credits.credits = list(np.asarray(self.rx_tables.credits))
+        self._emit_cnps(ecn_cnt)
 
         # ---- service chain over the accepted payload stream -------------
         payload = batch_np["payload"][:n]
@@ -268,6 +297,31 @@ class RdmaNode:
         for passed in self.fc.ack(qpn, max(released, 1)):
             self._dispatch(qpn, passed[1])
 
+    CNP_HOLDOFF = 8      # ticks: NP-side CNP coalescing window per QP
+
+    def _emit_cnps(self, ecn_cnt: np.ndarray):
+        """DCQCN NP role: one (coalesced) CNP per QP that saw CE marks in
+        this batch.  Runs unconditionally — the notification point needs
+        no local DCQCN state, so any receiver disciplines any sender."""
+        for qpn in np.nonzero(ecn_cnt)[0]:
+            qpn = int(qpn)
+            self.stats.ecn_marked_rx += int(ecn_cnt[qpn])
+            last = self._last_cnp_sent.get(qpn, -10**9)
+            if self.net.now - last < self.CNP_HOLDOFF:
+                continue
+            self._last_cnp_sent[qpn] = self.net.now
+            self.stats.cnp_tx += 1
+            self._send_ctrl(qpn, pk.make_cnp(self._remote_qpn(qpn),
+                                             src_ip=self.node_id))
+
+    def _on_cnp(self, p: pk.Packet):
+        """DCQCN RP role: cut this QP's rate.  A CNP is a pure
+        congestion signal — it must NOT release retransmission slots or
+        ACK-clocked budget (go-back-N state is untouched)."""
+        qpn = self._local_qpn(p.qpn)
+        self.stats.cnp_rx += 1
+        self.fc.on_cnp(qpn, self.net.now)
+
     NAK_HOLDOFF = 8      # ticks: rate-limit go-back-N resend bursts
 
     def _on_nak(self, p: pk.Packet):
@@ -278,8 +332,32 @@ class RdmaNode:
         self._last_nak_resend[qpn] = self.net.now
         expected = (p.ack_psn + 1) & pk.PSN_MASK
         for rp in self.retx.nak(qpn, expected, self.net.now):
+            self._send_retx(qpn, rp)
+
+    def _send_retx(self, qpn: int, rp: pk.Packet):
+        """Send a retransmission — immediately under plain ACK clocking,
+        through the pacing bucket under DCQCN (the rate limiter sits at
+        the wire: a resend burst must not re-congest the very queue
+        whose overflow it is repairing)."""
+        if self.fc.rate is None:
             self.stats.retransmissions += 1
             self._send(qpn, rp)
+            return
+        staged = self._retx_staged.setdefault(qpn, [])
+        if any(s.psn == rp.psn for s in staged):
+            return       # this PSN is already awaiting tokens
+        staged.append(rp)
+
+    def _drain_staged_retx(self):
+        rate = self.fc.rate
+        if rate is None or not self._retx_staged:
+            return
+        for qpn in sorted(self._retx_staged):
+            q = self._retx_staged[qpn]
+            while q and rate.take(qpn, 1):
+                self.stats.retransmissions += 1
+                self._send(qpn, q.pop(0))
+        self._retx_staged = {q: v for q, v in self._retx_staged.items() if v}
 
     def _on_read_request(self, p: pk.Packet):
         """Responder side of RDMA READ: stream the requested region
@@ -294,9 +372,49 @@ class RdmaNode:
 
     # ------------------------------------------------------------ timers
     def tick(self):
+        # rate-paced drain (DCQCN): token buckets refill once per tick;
+        # staged retransmissions spend tokens before new requests (they
+        # carry the oldest PSNs, and go-back-N wants them in order)
+        self.fc.tick_rate(self.net.now)
+        self._drain_staged_retx()
+        for qpn, item in self.fc.tick(self.net.now):
+            self._dispatch(qpn, item[1])
         for qpn, rp in self.retx.tick(self.net.now):
-            self.stats.retransmissions += 1
-            self._send(qpn, rp)
+            self._send_retx(qpn, rp)
+        # surface retry-budget exhaustion as a QP error instead of
+        # retransmitting forever (upper layers re-establish or fail over)
+        exhausted = self.retx.exhausted
+        while self._exhausted_seen < len(exhausted):
+            qpn, _psn = exhausted[self._exhausted_seen]
+            self._exhausted_seen += 1
+            self.qp_errors.add(qpn)
+
+    def qp_error(self, qpn: int) -> bool:
+        """True if the QP died on retry-budget exhaustion (fatal until
+        ``reestablish_qp``)."""
+        return qpn in self.qp_errors
+
+    def reestablish_qp(self, qpn: int, start_psn: int = 0):
+        """Tear down the errored QP's transport state and re-establish it
+        (paper §4.6 failover: fresh PSN space, empty retransmit ring,
+        drained flow-control queue)."""
+        self.retx.slots.pop(qpn, None)
+        self._retx_staged.pop(qpn, None)     # stale PSNs must not leak
+        self.fc.pending[qpn].clear()
+        self.fc.outstanding[qpn] = 0
+        self.fc.budget[qpn] = self.fc.cfg.window
+        self._last_nak_resend.pop(qpn, None)
+        self._last_cnp_sent.pop(qpn, None)
+        self.qp_errors.discard(qpn)
+        self.qp.reestablish(qpn, start_psn)
+        t = self.qp.tables
+        # mirror the reset into the jitted RX/TX tables
+        self.rx_tables = self.rx_tables._replace(
+            epsn=self.rx_tables.epsn.at[qpn].set(start_psn),
+            msn=self.rx_tables.msn.at[qpn].set(0),
+            bytes_left=self.rx_tables.bytes_left.at[qpn].set(0),
+            cur_vaddr=self.rx_tables.cur_vaddr.at[qpn].set(0))
+        t.npsn[qpn] = start_psn
 
     # ------------------------------------------------------------ helpers
     def _buffer_for(self, qpn: int):

@@ -153,26 +153,45 @@ class ServiceChain:
     services (e.g. DPI over the *decrypted* payload of an encrypted
     flow)."""
 
+    MAX_INSPECTORS = 32          # decision flags pack into one 32-bit word
+
     def __init__(self, on_path: Sequence[OnPathService] = (),
                  parallel: Sequence[ParallelPathService] = (),
                  parallel_after: Sequence[ParallelPathService] = ()):
         self.on_path = list(on_path)
         self.parallel = list(parallel)
         self.parallel_after = list(parallel_after)
+        inspectors = self.parallel + self.parallel_after
+        if len(inspectors) > self.MAX_INSPECTORS:
+            raise ValueError(
+                f"{len(inspectors)} parallel-path inspectors; the "
+                f"host-directed command carries at most "
+                f"{self.MAX_INSPECTORS} decision flag bits")
+        # explicit flag-bit layout: bit i belongs to inspectors[i]
+        # (pre-transform taps first, then post-transform taps), exposed
+        # by *name* so consumers never depend on insertion order.  Bits
+        # are assigned by position, so the same inspector instance
+        # tapping both placements gets two distinct bits.
+        self._par_bits = list(range(len(self.parallel)))
+        self._par_after_bits = list(range(len(self.parallel),
+                                          len(inspectors)))
+        self.flag_bits: Dict[str, int] = {}
+        for bit, svc in enumerate(inspectors):
+            name = svc.name
+            if name in self.flag_bits:       # duplicate service names
+                name = f"{name}@{bit}"
+            self.flag_bits[name] = bit
         self._jitted = jax.jit(self._process)
 
     def _process(self, payload, plen):
         flags = jnp.zeros(payload.shape[0], jnp.int32)
-        bit = 0
-        for svc in self.parallel:
+        for svc, bit in zip(self.parallel, self._par_bits):
             flags = flags | (svc(payload, plen) << bit)
-            bit += 1
         out = payload
         for svc in self.on_path:
             out = svc(out, plen)
-        for svc in self.parallel_after:
+        for svc, bit in zip(self.parallel_after, self._par_after_bits):
             flags = flags | (svc(out, plen) << bit)
-            bit += 1
         return out, flags
 
     def process(self, payload, plen):

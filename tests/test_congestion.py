@@ -1,0 +1,285 @@
+"""Congestion-control property suite (ECN marking -> CNP -> DCQCN).
+
+Properties (via tests/_hyp.py — hypothesis when installed, seeded fixed
+examples otherwise):
+  * the DCQCN rate stays inside [min_rate, line_rate] under any event
+    sequence, and the token bucket never goes negative or over-fills;
+  * a CNP never advances cumulative-ACK state: no retransmission slot is
+    released, no flow-control budget returned, no completion signalled;
+  * the batched RX engine stays bit-identical to the per-packet oracle
+    under random ECN marking (+ dup/gap traffic), including the per-QP
+    ``ecn_cnt`` reduction — and end-to-end on a lossy ECN fabric;
+  * 8:1 incast with DCQCN converges to >= 80% aggregate goodput with
+    zero drop-tail deaths (no QP exhausts its retry budget).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from _hyp import given, settings, st
+from repro.core import packet as pk
+from repro.core import pipeline as pipe
+from repro.core.flow_control import (AckClockedFlowControl, DcqcnConfig,
+                                     DcqcnRateController, FlowControlConfig)
+from repro.core.netsim import (FabricConfig, SwitchedFabric,
+                               dcqcn_fabric_profile, incast_scenario)
+from repro.core.rdma import RdmaNode, run_network
+
+
+# ---------------------------------------------------------------------------
+# DCQCN rate-controller invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["cnp", "tick", "take"]),
+                          st.integers(1, 6)), max_size=300),
+       st.integers(1, 8), st.integers(1, 40))
+def test_dcqcn_rate_and_token_bounds(events, line_rate, min_rate_pct):
+    """INVARIANT: min_rate <= rate <= line_rate and 0 <= tokens <= burst
+    at every point, whatever the CNP/timer interleaving."""
+    cfg = DcqcnConfig(line_rate=float(line_rate),
+                      min_rate=line_rate * min_rate_pct / 100.0)
+    rc = DcqcnRateController(2, cfg, burst=16.0)
+    rc.activate(0)
+    now = 0
+    for kind, n in events:
+        if kind == "cnp":
+            rc.on_cnp(0, now)
+        elif kind == "take":
+            rc.take(0, n)
+        else:
+            for _ in range(n):
+                now += 1
+                rc.tick(now)
+        assert cfg.min_rate <= rc.rate[0] <= cfg.line_rate + 1e-9
+        assert cfg.min_rate <= rc.target[0] <= cfg.line_rate + 1e-9
+        assert 0.0 <= rc.alpha[0] <= 1.0
+        assert 0.0 <= rc.tokens[0] <= rc.burst + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["req", "ack", "cnp", "tick"]),
+                          st.integers(1, 8)), max_size=200),
+       st.integers(1, 32))
+def test_dcqcn_flow_control_invariants(events, window):
+    """The ACK-clock invariants survive rate pacing: outstanding never
+    exceeds the window, nothing is ever dropped (only delayed)."""
+    fc = AckClockedFlowControl(2, FlowControlConfig(
+        window, congestion_control="dcqcn",
+        dcqcn=DcqcnConfig(line_rate=4.0)))
+    submitted = passed = 0
+    now = 0
+    for kind, n in events:
+        n = min(n, window)
+        if kind == "req":
+            submitted += 1
+            passed += len(fc.request(0, n))
+        elif kind == "ack":
+            passed += len(fc.ack(0, n))
+        elif kind == "cnp":
+            fc.on_cnp(0, now)
+        else:
+            for _ in range(n):
+                now += 1
+                passed += len(fc.tick(now))
+        assert fc.outstanding[0] <= window
+        assert fc.budget[0] >= 0
+    # pacing delays, never drops: whatever has not passed is still queued
+    assert passed + fc.queue_depth(0) == submitted
+
+
+def test_dcqcn_rate_recovers_after_cut():
+    """Fast recovery + additive increase climb back toward line rate
+    once CNPs stop."""
+    cfg = DcqcnConfig(line_rate=4.0)
+    rc = DcqcnRateController(1, cfg)
+    rc.activate(0)
+    for now in range(1, 20):
+        rc.tick(now)
+    rc.on_cnp(0, 20)
+    cut = rc.rate[0]
+    assert cut < 4.0
+    for now in range(21, 1600):
+        rc.tick(now)
+    assert rc.rate[0] > cut
+    assert rc.rate[0] >= 0.9 * cfg.line_rate     # climbed nearly back
+    assert rc.alpha[0] < 0.1                     # congestion estimate decayed
+
+
+# ---------------------------------------------------------------------------
+# CNPs never ACK data
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 20))
+def test_cnp_never_acks_data(n_cnps):
+    """PROPERTY: delivering any number of CNPs to a sender with unacked
+    data releases no retransmission slot, returns no flow-control
+    budget, and completes no message."""
+    fab = SwitchedFabric(2, FabricConfig(port_bandwidth=4, port_delay=1,
+                                         loss_prob=1.0, seed=1))  # black hole
+    a = RdmaNode(0, fab, fc_window=8, congestion_control="dcqcn")
+    b = RdmaNode(1, fab)
+    qpn, _, _ = a.init_rdma(1 << 16, b)
+    data = np.arange(5 * pk.MTU, dtype=np.uint8)
+    a.rdma_write(qpn, data)
+    # drain pacing so some packets actually left (and were eaten)
+    for _ in range(16):
+        fab.tick()
+        a.tick()
+    held = a.retx.outstanding(qpn)
+    assert held > 0
+    outstanding = a.fc.outstanding[qpn]
+    budget = a.fc.budget[qpn]
+    completed = a.check_completed(qpn)
+    epsn = int(a.rx_tables.epsn[qpn])
+    for _ in range(n_cnps):
+        a.on_packets([pk.make_cnp(qpn)])
+    assert a.retx.outstanding(qpn) == held
+    assert a.fc.outstanding[qpn] == outstanding
+    assert a.fc.budget[qpn] == budget
+    assert a.check_completed(qpn) == completed
+    assert int(a.rx_tables.epsn[qpn]) == epsn
+    assert a.stats.cnp_rx == n_cnps
+    # ... but the rate controller did react
+    assert a.fc.rate.rate[qpn] < a.fc.rate.cfg.line_rate
+
+
+# ---------------------------------------------------------------------------
+# Batched engine == oracle under ECN marking
+# ---------------------------------------------------------------------------
+
+def _random_ecn_trace(rng, n_qps, n_pkts):
+    """In-seq / dup / gap traffic with random CE marks."""
+    pkts, psn = [], {}
+    for _ in range(n_pkts):
+        q = int(rng.integers(0, n_qps))
+        p0 = psn.get(q, 0)
+        r = rng.random()
+        if r < 0.6:
+            use, psn[q] = p0, p0 + 1
+        elif r < 0.8:
+            use = max(0, p0 - int(rng.integers(1, 3)))
+        else:
+            use = p0 + int(rng.integers(1, 3))
+        plen = int(rng.integers(1, 200))
+        op = int(rng.choice([pk.WRITE_ONLY, pk.WRITE_FIRST,
+                             pk.WRITE_MIDDLE, pk.WRITE_LAST]))
+        pkts.append(pk.Packet(opcode=op, qpn=q, psn=use,
+                              payload=np.zeros(plen, np.uint8),
+                              vaddr=int(rng.integers(0, 4096)),
+                              dma_len=plen, ecn=bool(rng.random() < 0.4)))
+    return pkts
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31), st.integers(1, 32), st.integers(1, 120),
+       st.integers(0, 8))
+def test_rx_engines_bit_identical_under_ecn(seed, n_qps, n_pkts, pad):
+    rng = np.random.default_rng(seed)
+    b = pk.batch_from_packets(_random_ecn_trace(rng, n_qps, n_pkts), mtu=256)
+    if pad:                                # trailing invalid lanes
+        for k, v in b.items():
+            b[k] = np.concatenate([v, np.zeros((pad,) + v.shape[1:],
+                                               v.dtype)])
+        b["valid"][n_pkts:] = 0
+        b["ecn"][n_pkts:] = 1              # CE on dead lanes must not count
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    t0 = pipe.make_rx_tables(n_qps, initial_credits=5)
+    ta, ra = pipe.rx_pipeline(t0, batch)
+    tb, rb = pipe.rx_pipeline_batched(t0, batch)
+    for f in pipe.RxTables._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ta, f)), np.asarray(getattr(tb, f)),
+            err_msg=f"tables.{f}")
+    for f in pipe.RxResult._fields:
+        a_, b_ = np.asarray(getattr(ra, f)), np.asarray(getattr(rb, f))
+        if f == "ecn_cnt":                 # (Q,): compare in full
+            np.testing.assert_array_equal(a_, b_, err_msg="result.ecn_cnt")
+        else:
+            np.testing.assert_array_equal(a_[:n_pkts], b_[:n_pkts],
+                                          err_msg=f"result.{f}")
+    # the reduction is consistent with the per-packet echoes
+    want = np.zeros(n_qps, np.int32)
+    np.add.at(want, b["qpn"][:n_pkts][np.asarray(ra.ecn_echo)[:n_pkts]], 1)
+    np.testing.assert_array_equal(np.asarray(ra.ecn_cnt), want)
+
+
+def _run_ecn_lossy(engine: str):
+    """Lossy ECN fabric + DCQCN senders, one engine."""
+    fab = SwitchedFabric(2, FabricConfig(
+        port_bandwidth=4, port_delay=2, queue_capacity=16,
+        loss_prob=0.05, ecn_kmin=2, ecn_kmax=8, ecn_pmax=0.25, seed=23))
+    a = RdmaNode(0, fab, fc_window=16, engine=engine,
+                 congestion_control="dcqcn")
+    b = RdmaNode(1, fab, fc_window=16, engine=engine,
+                 congestion_control="dcqcn")
+    rng = np.random.default_rng(29)
+    qps = [a.init_rdma(1 << 16, b)[0] for _ in range(3)]
+    datas = [rng.integers(0, 256, 15_000 + 997 * i, dtype=np.uint8)
+             for i in range(3)]
+    for q, d in zip(qps, datas):
+        a.rdma_write(q, d)
+    run_network([a, b], max_ticks=120_000)
+    bufs = [b._qp_buffer[i + 1][1][:len(d)].copy()
+            for i, d in enumerate(datas)]
+    return bufs, datas, (a.stats, b.stats), b.rx_tables
+
+
+def test_engines_identical_end_to_end_with_ecn():
+    """Same lossy ECN-marking trace, both engines: identical delivery,
+    CNP/ECN stats and final RX tables (the PR's bit-identity criterion
+    extended to the congestion loop)."""
+    bufs_s, datas, stats_s, tbl_s = _run_ecn_lossy("scan")
+    bufs_b, _, stats_b, tbl_b = _run_ecn_lossy("batched")
+    for bs, bb, d in zip(bufs_s, bufs_b, datas):
+        np.testing.assert_array_equal(bs, d)
+        np.testing.assert_array_equal(bb, d)
+    assert stats_s == stats_b              # includes ecn_marked_rx/cnp_tx/rx
+    assert stats_s[1].cnp_tx > 0           # the loop actually fired
+    for f in pipe.RxTables._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(tbl_s, f)),
+                                      np.asarray(getattr(tbl_b, f)),
+                                      err_msg=f"rx_tables.{f}")
+
+
+# ---------------------------------------------------------------------------
+# Incast convergence (the tentpole's end-to-end acceptance property)
+# ---------------------------------------------------------------------------
+
+def test_incast_dcqcn_converges():
+    """8:1 incast with DCQCN: >= 80% aggregate goodput, exact delivery,
+    and zero drop-tail deaths (no QP exhausts its retry budget)."""
+    message_bytes = 1 << 20
+    res = incast_scenario(8, message_bytes=message_bytes,
+                          congestion_control="dcqcn")
+    line = 4 * pk.MTU                      # hot-port drain, payload B/tick
+    goodput = 8 * message_bytes / max(res.ticks, 1)
+    for i, data in enumerate(res.payloads):
+        np.testing.assert_array_equal(
+            res.receiver._qp_buffer[i + 1][1][:len(data)], data,
+            err_msg=f"sender {i}")
+    assert goodput / line >= 0.80, (
+        f"DCQCN incast converged to only {goodput / line:.1%} of line rate")
+    assert all(not s.retx.exhausted for s in res.senders), "a flow died"
+    assert not res.senders[0].qp_errors
+    # the control loop was genuinely exercised
+    assert res.receiver.stats.cnp_tx > 0
+    assert sum(s.stats.cnp_rx for s in res.senders) > 0
+    assert res.fabric.port_stats[0].ecn_marked > 0
+
+
+def test_incast_dcqcn_beats_ack_clocked():
+    """The acceptance comparison at 8:1 on one identical fabric:
+    strictly fewer drop-tail drops and >= 1.3x goodput."""
+    fab_cfg = dcqcn_fabric_profile()
+    runs = {}
+    for cc in ("ack_clocked", "dcqcn"):
+        res = incast_scenario(8, message_bytes=1 << 20, fabric_cfg=fab_cfg,
+                              congestion_control=cc)
+        runs[cc] = (res.fabric.port_stats[0].tail_dropped, res.ticks)
+    drops_off, ticks_off = runs["ack_clocked"]
+    drops_on, ticks_on = runs["dcqcn"]
+    assert drops_on < drops_off, (drops_on, drops_off)
+    assert ticks_off / ticks_on >= 1.3, (ticks_off, ticks_on)

@@ -107,6 +107,51 @@ def test_e2e_encrypted_rdma_flow(dpi_params):
     np.testing.assert_array_equal(b._qp_buffer[1][1][:len(data)], data)
 
 
+def test_service_chain_flag_bit_layout():
+    """Decision-flag bits have named positions exposed on the chain
+    (pre-transform taps first, then post-transform taps) — consumers
+    address flags by name, never by inspector insertion order."""
+    from repro.core.services import ParallelPathService
+
+    class _Always(ParallelPathService):
+        def __init__(self, name):
+            self.name = name
+
+        def __call__(self, payload, plen):
+            return jnp.ones(payload.shape[0], jnp.int32)
+
+    class _Never(ParallelPathService):
+        def __init__(self, name):
+            self.name = name
+
+        def __call__(self, payload, plen):
+            return jnp.zeros(payload.shape[0], jnp.int32)
+
+    chain = ServiceChain(parallel=[_Always("icrc"), _Never("rate-limit")],
+                         parallel_after=[_Always("ml-dpi")])
+    assert chain.flag_bits == {"icrc": 0, "rate-limit": 1, "ml-dpi": 2}
+    pay = np.zeros((3, 256), np.uint8)
+    _, flags = chain.process(jnp.asarray(pay),
+                             jnp.asarray(np.full(3, 256, np.int32)))
+    flags = np.asarray(flags)
+    assert ((flags >> chain.flag_bits["icrc"]) & 1).all()
+    assert not ((flags >> chain.flag_bits["rate-limit"]) & 1).any()
+    assert ((flags >> chain.flag_bits["ml-dpi"]) & 1).all()
+    # duplicate names get disambiguated, never silently merged
+    dup = ServiceChain(parallel=[_Always("icrc"), _Never("icrc")])
+    assert sorted(dup.flag_bits.values()) == [0, 1]
+    # the SAME instance tapping both placements gets two distinct bits
+    tap = _Always("ml-dpi")
+    both = ServiceChain(parallel=[tap], parallel_after=[tap])
+    assert sorted(both.flag_bits.values()) == [0, 1]
+    _, f2 = both.process(jnp.asarray(pay),
+                         jnp.asarray(np.full(3, 256, np.int32)))
+    assert (np.asarray(f2) == 0b11).all()
+    # the 32-bit host-directed command bounds the inspector count
+    with pytest.raises(ValueError):
+        ServiceChain(parallel=[_Never(f"i{i}") for i in range(33)])
+
+
 def test_crc_service_flags_corruption():
     svc = CrcService()
     pay = np.random.default_rng(6).integers(0, 256, (4, 512), dtype=np.uint8)

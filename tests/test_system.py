@@ -58,6 +58,36 @@ def test_ingest_straggler_failover():
     assert ing.refetches >= 1
 
 
+def test_ingest_failover_after_retry_exhaustion():
+    """Killed storage node, deterministic: the trainer's retry budget
+    exhausts (QP error) within the straggler window, the replica serves
+    the shard via reestablish_qp, and the error state is cleared."""
+    cfg = get_smoke_config("granite-3-2b")
+    shard_fn = lambda i: syn.encode_lm_shard(
+        syn.lm_shard(i, 2, 16, cfg.vocab))
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=1 << 14, n_storage_nodes=2,
+                     straggler_timeout_ticks=400), None,
+        shard_fn, syn.decode_lm_shard)
+    # tight retry budget so exhaustion fits inside one straggler window
+    ing.trainer.retx.MAX_RETRIES = 2
+    ing.trainer.retx.timeout = 20
+    primary = ing.storage[0].node
+    for (src, dst), link in ing.net.links.items():
+        if src == primary.node_id:          # kill ALL outbound traffic
+            link.cfg.loss_prob = 1.0
+    got = ing.fetch_shard(0)
+    want = syn.lm_shard(0, 2, 16, cfg.vocab)
+    np.testing.assert_array_equal(np.asarray(got["tokens"]), want["tokens"])
+    assert ing.refetches >= 1
+    # the dead QP genuinely exhausted its budget and was surfaced...
+    assert ing.trainer.retx.exhausted
+    qpn_dead = ing.trainer.retx.exhausted[0][0]
+    # ...then cleared by the reestablish during failover
+    assert not ing.trainer.qp_error(qpn_dead)
+    assert ing.trainer.retx.outstanding(qpn_dead) == 0
+
+
 def test_ingest_preprocessed_dlrm_stream():
     """Paper §8 end to end: raw records stream through the on-path
     preprocessing service and arrive device-ready."""

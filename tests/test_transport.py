@@ -138,6 +138,51 @@ def test_retransmit_timeout_and_ack_release():
     assert rb.tick(now=1000) == []
 
 
+def test_retransmit_exponential_backoff_then_exhaustion():
+    """A never-acked slot is retried with doubling deadlines until the
+    retry budget runs out, then evicted and reported — not retried
+    forever."""
+    rb = RetransmissionBuffer(timeout_ticks=10)
+    rb.MAX_RETRIES = 4
+    p = pk.fragment_message(1, 0, 0, 1, np.zeros(10, np.uint8))[0]
+    rb.hold(1, p, now=0)
+    resend_times = []
+    for t in range(1, 2000):
+        if rb.tick(t):
+            resend_times.append(t)
+        if not rb.outstanding(1):
+            break
+    assert resend_times == [10, 30, 70, 150]     # gaps 10, 20, 40, 80
+    gaps = np.diff([0] + resend_times)
+    assert all(g2 == 2 * g1 for g1, g2 in zip(gaps, gaps[1:]))
+    assert rb.exhausted == [(1, 0)]              # fatal, surfaced
+    assert rb.outstanding(1) == 0                # slot evicted
+    assert rb.tick(3000) == []                   # and it stays quiet
+
+
+@pytest.mark.parametrize("cc", ["ack_clocked", "dcqcn"])
+def test_retry_exhaustion_surfaces_qp_error(cc):
+    """Dead peer: the node ends up with a QP error instead of an
+    infinite retransmit loop, and reestablish_qp clears it — including
+    any rate-paced resends still staged from the old PSN space."""
+    net = Network(2, LinkConfig(loss_prob=1.0, latency_ticks=1, seed=5))
+    a = RdmaNode(0, net, congestion_control=cc)
+    b = RdmaNode(1, net)
+    qpn, _, _ = a.init_rdma(1 << 14, b)
+    a.retx.MAX_RETRIES = 3
+    a.retx.timeout = 8
+    a.rdma_write(qpn, np.zeros(3 * pk.MTU, np.uint8))
+    ticks = run_network([a, b], max_ticks=5000)
+    assert ticks < 5000                          # did NOT loop forever
+    assert a.qp_error(qpn)
+    assert a.retx.exhausted and a.retx.exhausted[0][0] == qpn
+    assert a.retx.outstanding(qpn) == 0          # slots evicted
+    a.reestablish_qp(qpn)
+    assert not a.qp_error(qpn)
+    assert int(a.qp.tables.npsn[qpn]) == 0       # fresh PSN space
+    assert qpn not in a._retx_staged             # no stale PSNs leak
+
+
 # ---------------------------------------------------------------------------
 # RX pipeline PSN semantics (jax scan FSM)
 # ---------------------------------------------------------------------------
