@@ -19,10 +19,11 @@ def _section(name):
 
 def main() -> None:
     from benchmarks import (fig4_transport, fig5_breakdown, fig6_multiqp,
-                            fig7_aes, fig8_dpi, fig10_dlrm, table2_resources)
+                            fig7_aes, fig8_dpi, fig10_dlrm, fig11_allreduce,
+                            table2_resources)
     print("name,us_per_call,derived")
     for mod in (fig4_transport, fig5_breakdown, fig6_multiqp, fig7_aes,
-                fig8_dpi, table2_resources, fig10_dlrm):
+                fig8_dpi, table2_resources, fig10_dlrm, fig11_allreduce):
         _section(mod.__name__)
         try:
             mod.main()

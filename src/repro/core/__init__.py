@@ -8,6 +8,10 @@ services                 — on-path & parallel-path enhancements (§5)
 rdma                     — the full endpoint (verbs of §4.6)
 ingest                   — storage -> RDMA -> services -> device (§8)
 sniffer                  — PCAP traffic capture (§4.7)
+collectives              — ring/tree collectives over the verbs, with
+                           the in-fabric reduction offload (the switch
+                           folds CHUNK payloads at the hop; the ML-
+                           fabric workload of the paper's §1 pitch)
 
 FPGA -> TPU design dual (the repo-wide translation rule): the FPGA
 realizes deep pipelines processing one beat per cycle with per-QP state

@@ -32,6 +32,11 @@ Two topologies:
 
 Both expose the same surface (``send`` / ``tick`` / ``quiescent`` /
 ``now``) so ``RdmaNode`` and ``run_network`` work with either.
+
+The switched fabric can additionally host a ``SwitchReducer`` (the
+in-fabric reduction offload of ``repro.core.collectives``): CHUNK-
+tagged packets are folded at the hop instead of forwarded, with the
+switch playing a full go-back-N responder toward the contributors.
 """
 from __future__ import annotations
 
@@ -118,8 +123,209 @@ class Network:
 
 
 # ---------------------------------------------------------------------------
-# Switched fabric
+# Switched fabric (+ the in-fabric reduction offload)
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _ReduceSlot:
+    """One in-flight reduction: (coll_tag, coll_frag) -> contributions."""
+    nsrc: int
+    dst: int
+    contribs: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    carrier: Optional[pk.Packet] = None     # held until the slot completes
+    done_payload: Optional[np.ndarray] = None
+
+
+class SwitchReducer:
+    """Switch-resident reduction engine (the in-fabric half of the
+    collective offload; control-plane handle: ``collectives.
+    AllreduceService``).
+
+    The paper's thesis is line-rate compute on data *as it arrives from
+    the network*; this is that idea moved one hop upstream, onto the
+    switch the fabric models (SHARP / SwitchML lineage, expressed in
+    BALBOA vocabulary).  Architecturally it is a parallel-path service
+    tap placed at the congestion point: CHUNK-tagged packets (``Packet.
+    coll_*``) are diverted off the forwarding path as they leave the
+    ingress wire, their payloads accumulate in per-(tag, fragment)
+    slots, and once all ``coll_nsrc`` contributors delivered a fragment
+    ONE summed packet enters the egress queue — the N:1 incast of a
+    direct reduction never touches the drop-tail buffer.
+
+    Transport invariants are preserved, not bypassed:
+
+      * the switch plays a full go-back-N *responder* per contributor
+        stream (fragment-granular: in-sequence contributions are
+        absorbed and ACKed, gaps are NAKed, late retransmissions are
+        re-ACKed) — per-packet ACKs alone would be wrong, because the
+        sender's release is cumulative and an ACK for fragment k+1
+        would silently free a lost fragment k that nobody could ever
+        resend;
+      * the **carrier** (fold position ``nsrc - 1``) is never absorbed:
+        its packets are held and forwarded with payloads replaced by
+        the fold result, so the destination sees one ordinary in-order
+        WRITE stream — PSN checking, rkey protection, crediting and
+        completion generation all run unchanged;
+      * retransmissions dedup against the slot (re-ACKed, never
+        double-summed); a carrier retransmission after completion is
+        re-filled from the cached result, so losses *behind* the switch
+        recover end-to-end exactly like any other loss.
+
+    The fold runs in canonical contribution order (``coll_src`` IS the
+    fold position) via ``reduce_fn`` — the jitted segmented-reduce
+    kernel — which is what keeps ring and offloaded collectives
+    bit-identical.
+    """
+
+    def __init__(self, reduce_fn):
+        self.reduce_fn = reduce_fn          # (K, L) u8 -> (L,) u8, row order
+        self._slots: Dict[Tuple[int, int], _ReduceSlot] = {}
+        # per-tag forwarding cursor: completed fragments are released to
+        # the egress queue IN ORDER, so a loss-induced completion gap
+        # never shows the destination an out-of-order carrier PSN (the
+        # resulting NAK storm would burn the carrier's retry budget on
+        # resends the incomplete slot cannot serve yet)
+        self._next_fwd: Dict[int, int] = {}
+        # per-(tag, fold position) responder cursor: next fragment
+        # expected in sequence from that contributor stream
+        self._next_frag: Dict[Tuple[int, int], int] = {}
+        # control plane: (src node, dst node) -> the contributor's local
+        # QPN, installed by the collective group at setup so synthesized
+        # ACKs address the right sender-side QP
+        self._ack_qpn: Dict[Tuple[int, int], int] = {}
+        # telemetry
+        self.absorbed = 0            # contributions summed at the hop
+        self.acks_synthesized = 0
+        self.naks_synthesized = 0    # go-back-N NAKs for stream gaps
+        self.reduced_forwarded = 0   # summed packets released to egress
+        self.dup_dropped = 0
+        self.refills = 0             # carrier retransmits after completion
+        self.peak_slots = 0
+        self.bytes_reduced = 0
+
+    def register_qp(self, src_node: int, dst_node: int, src_qpn: int):
+        self._ack_qpn[(src_node, dst_node)] = src_qpn
+
+    def clear(self):
+        """Drop completed-slot caches (safe once the fabric is
+        quiescent — between collective operations)."""
+        self._slots.clear()
+        self._next_fwd.clear()
+        self._next_frag.clear()
+
+    @property
+    def in_flight(self) -> int:
+        """Held carrier packets (awaiting completion or in-order
+        release) — in-flight work the fabric must not call quiescent."""
+        return sum(s.carrier is not None for s in self._slots.values())
+
+    # ---- datapath ----------------------------------------------------
+    def on_packet(self, dst: int, p: pk.Packet
+                  ) -> List[Tuple[int, pk.Packet]]:
+        """Process one CHUNK-tagged arrival.  Returns ``(port, packet)``
+        pairs to enqueue (summed forwards toward ``dst``, synthesized
+        ACKs/NAKs back toward contributors); the contribution itself
+        never reaches an egress queue."""
+        tag, frag, pos = p.coll_tag, p.coll_frag, p.coll_src
+        is_carrier = pos == p.coll_nsrc - 1
+        nxt = self._next_frag.get((tag, pos), 0)
+
+        if frag > nxt:
+            # sequence gap in this contributor stream (an earlier
+            # fragment was lost on the wire): go-back-N, exactly like a
+            # receiving endpoint — dropping + NAKing is what keeps the
+            # sender's cumulative-ACK release sound
+            self.naks_synthesized += 1
+            return self._nak(p, dst, nxt)
+
+        if frag < nxt:                         # retransmission from behind
+            self.dup_dropped += 1
+            if not is_carrier:
+                # the earlier ACK was lost; re-ACK at boundaries only
+                # (cumulative release covers the rest, as at an endpoint)
+                return self._ack(p, dst) if p.ack_req else []
+            slot = self._slots.get((tag, frag))
+            if (slot is not None and slot.done_payload is not None
+                    and frag < self._next_fwd.get(tag, 0)):
+                # the summed forward was lost behind the switch: re-fill
+                # from the cached fold and send it again
+                self.refills += 1
+                return [(dst, self._filled(p, slot.done_payload))]
+            return []                          # held / queued: nothing to do
+
+        # in sequence: absorb the contribution
+        self._next_frag[(tag, pos)] = nxt + 1
+        slot = self._slots.get((tag, frag))
+        if slot is None:
+            slot = self._slots[(tag, frag)] = _ReduceSlot(
+                nsrc=p.coll_nsrc, dst=dst)
+            self.peak_slots = max(self.peak_slots, len(self._slots))
+        slot.contribs[pos] = np.asarray(p.payload, np.uint8).copy()
+        out: List[Tuple[int, pk.Packet]] = []
+        if is_carrier:
+            slot.carrier = p                   # held, forwarded on completion
+        else:
+            self.absorbed += 1
+            if p.ack_req:
+                # ACK like an endpoint: only at sub-message boundaries,
+                # releasing the whole window cumulatively — per-packet
+                # ACKs would flood the contributors' egress ports and
+                # throttle the very phase the offload accelerates
+                out.extend(self._ack(p, dst))
+
+        if len(slot.contribs) == slot.nsrc:    # fold, then release in order
+            stack = np.stack([slot.contribs[i] for i in range(slot.nsrc)])
+            slot.done_payload = np.asarray(self.reduce_fn(stack), np.uint8)
+            self.bytes_reduced += int(stack.nbytes)
+            slot.contribs = {}                 # keep only the fold result
+            out.extend(self._flush(tag))
+        return out
+
+    def _flush(self, tag: int) -> List[Tuple[int, pk.Packet]]:
+        """Release every completed fragment at the head of the tag's
+        forwarding cursor (the carrier stream stays in PSN order)."""
+        out: List[Tuple[int, pk.Packet]] = []
+        nxt = self._next_fwd.get(tag, 0)
+        while True:
+            slot = self._slots.get((tag, nxt))
+            if slot is None or slot.done_payload is None \
+                    or slot.carrier is None:
+                break
+            self.reduced_forwarded += 1
+            out.append((slot.dst, self._filled(slot.carrier,
+                                               slot.done_payload)))
+            slot.carrier = None
+            nxt += 1
+        self._next_fwd[tag] = nxt
+        return out
+
+    def _filled(self, carrier: pk.Packet, payload: np.ndarray) -> pk.Packet:
+        p = carrier.clone()
+        p.payload = payload.copy()
+        return p
+
+    def _src_qpn(self, p: pk.Packet, dst: int) -> int:
+        try:
+            return self._ack_qpn[(p.src_ip, dst)]
+        except KeyError:
+            raise RuntimeError(
+                f"SwitchReducer: CHUNK from node {p.src_ip} to port {dst} "
+                f"but no QP registered — install the collective group's "
+                f"control plane before sending tagged traffic") from None
+
+    def _ack(self, p: pk.Packet, dst: int) -> List[Tuple[int, pk.Packet]]:
+        self.acks_synthesized += 1
+        return [(p.src_ip, pk.make_ack(self._src_qpn(p, dst), p.psn))]
+
+    def _nak(self, p: pk.Packet, dst: int, expected_frag: int
+             ) -> List[Tuple[int, pk.Packet]]:
+        # fragments map 1:1 onto consecutive PSNs within one tagged
+        # stream, so the PSN of the first missing fragment is recoverable
+        # from any later packet; NAK semantics resume resending there
+        ack_psn = (p.psn - (p.coll_frag - expected_frag) - 1) & pk.PSN_MASK
+        return [(p.src_ip,
+                 pk.make_ack(self._src_qpn(p, dst), ack_psn, nak=True))]
 
 def _per_port(value: Union[int, Sequence[int]], n_ports: int) -> List[int]:
     """Broadcast a scalar config to all ports, or validate a sequence."""
@@ -191,6 +397,20 @@ class SwitchedFabric:
         self.egress: List[Deque[pk.Packet]] = [
             collections.deque() for _ in range(n_nodes)]
         self.port_stats = [PortStats() for _ in range(n_nodes)]
+        self.reducer: Optional[SwitchReducer] = None
+
+    def attach_reducer(self, reducer: SwitchReducer):
+        """Install the in-fabric reduction offload (collective control
+        plane).  CHUNK-tagged packets are then diverted to the reducer
+        as they leave the ingress wire, before the egress queues.  One
+        reducer per fabric: silently replacing an attached one would
+        strand the first group's tagged traffic on the wrong control
+        plane (wrong ACK QPs, wrong fold dtype)."""
+        if self.reducer is not None and self.reducer is not reducer:
+            raise RuntimeError(
+                "SwitchedFabric already has a reducer attached; offload "
+                "groups sharing a fabric must share one AllreduceService")
+        self.reducer = reducer
 
     def send(self, src: int, dst: int, p: pk.Packet):
         st = self.port_stats[dst]
@@ -208,14 +428,14 @@ class SwitchedFabric:
         self.now += 1
         while self._wire and self._wire[0][0] <= self.now:
             _, _, dst, p = heapq.heappop(self._wire)
-            q = self.egress[dst]
-            st = self.port_stats[dst]
-            if len(q) >= self.cfg.queue_capacity:
-                st.tail_dropped += 1
+            if p.coll_tag and self.reducer is not None:
+                # in-fabric reduction: the contribution is consumed at
+                # the hop; only summed forwards / synthesized ACKs enter
+                # the (drop-tail) egress queues
+                for port, outp in self.reducer.on_packet(dst, p):
+                    self._enqueue(port, outp)
                 continue
-            q.append(p)
-            st.enqueued += 1
-            st.max_depth = max(st.max_depth, len(q))
+            self._enqueue(dst, p)
         out: Dict[Tuple[int, int], List[pk.Packet]] = {}
         for dst in range(self.n_nodes):
             q = self.egress[dst]
@@ -236,6 +456,17 @@ class SwitchedFabric:
             out[(-1, dst)] = batch
         return out
 
+    def _enqueue(self, dst: int, p: pk.Packet):
+        """Drop-tail admission into a port's egress queue."""
+        q = self.egress[dst]
+        st = self.port_stats[dst]
+        if len(q) >= self.cfg.queue_capacity:
+            st.tail_dropped += 1
+            return
+        q.append(p)
+        st.enqueued += 1
+        st.max_depth = max(st.max_depth, len(q))
+
     def _ecn_mark(self, depth: int) -> bool:
         """RED-style marking decision for a dequeue leaving ``depth``
         packets behind it (including itself).  Only draws randomness
@@ -253,7 +484,8 @@ class SwitchedFabric:
         return bool(self.rng.random() < prob)
 
     def quiescent(self) -> bool:
-        return not self._wire and all(not q for q in self.egress)
+        return (not self._wire and all(not q for q in self.egress)
+                and (self.reducer is None or self.reducer.in_flight == 0))
 
     # ---- telemetry ----------------------------------------------------
     @property

@@ -28,6 +28,8 @@ READ_RESP_LAST = 0x0F
 READ_RESP_ONLY = 0x10
 ACK = 0x11
 NAK = 0x31          # we fold the NAK syndrome into its own opcode
+NAK_PROT = 0x32     # NAK, remote-access (R_Key) protection error: fatal,
+                    # the requester must not retry (IB "Remote Access Error")
 CNP = 0x81          # RoCE v2 congestion notification packet (DCQCN NP->RP)
 
 OPCODE_NAMES = {
@@ -35,7 +37,8 @@ OPCODE_NAMES = {
     WRITE_LAST: "WRITE_LAST", WRITE_ONLY: "WRITE_ONLY",
     READ_REQUEST: "READ_REQUEST", READ_RESP_FIRST: "READ_RESP_FIRST",
     READ_RESP_MIDDLE: "READ_RESP_MIDDLE", READ_RESP_LAST: "READ_RESP_LAST",
-    READ_RESP_ONLY: "READ_RESP_ONLY", ACK: "ACK", NAK: "NAK", CNP: "CNP",
+    READ_RESP_ONLY: "READ_RESP_ONLY", ACK: "ACK", NAK: "NAK",
+    NAK_PROT: "NAK_PROT", CNP: "CNP",
 }
 
 WRITE_OPS = (WRITE_FIRST, WRITE_MIDDLE, WRITE_LAST, WRITE_ONLY)
@@ -85,6 +88,20 @@ class Packet:
     # switch when an egress queue crosses its Kmin/Kmax marking
     # thresholds; echoed by the receiver as a CNP (DCQCN NP role).
     ecn: bool = False
+    # Collective CHUNK tag (in-fabric reduction offload).  ``coll_tag``
+    # != 0 marks this payload packet as one contribution to a switch-
+    # resident reduction slot; the fabric's SwitchReducer absorbs the
+    # contribution (synthesizing the transport ACK itself) instead of
+    # forwarding it, and releases one summed packet per fragment once
+    # all ``coll_nsrc`` contributors delivered it.  ``coll_src`` is the
+    # contributor's position in the canonical fold order (NOT its rank;
+    # position coll_nsrc-1 is the *carrier* whose packets survive the
+    # hop and deliver the sums).  ``coll_frag`` indexes the MTU-sized
+    # fragment within the chunk, so slots reduce fragment-wise.
+    coll_tag: int = 0
+    coll_src: int = -1
+    coll_nsrc: int = 0
+    coll_frag: int = -1
 
     @property
     def payload_len(self) -> int:
@@ -134,13 +151,20 @@ def batch_from_packets(pkts, mtu: int = MTU) -> Dict[str, np.ndarray]:
 def fragment_message(
     qpn: int, start_psn: int, vaddr: int, rkey: int, data: np.ndarray,
     *, op: str = "write", mtu: int = MTU, src_ip: int = 0, dst_ip: int = 0,
+    coll: Optional[tuple] = None,
 ):
     """Fragment one RDMA WRITE (or READ RESPONSE) payload into MTU-sized
     packets with FIRST/MIDDLE/LAST/ONLY opcodes, consecutive PSNs and a
-    RETH on the first packet (paper §4.1 TX path)."""
+    RETH on the first packet (paper §4.1 TX path).
+
+    ``coll = (tag, src, nsrc, frag_base)`` stamps every fragment as a
+    collective CHUNK contribution (fragment indices continue from
+    ``frag_base``, so one chunk split into several flow-control
+    sub-messages still numbers its fragments globally)."""
     assert op in ("write", "read_resp")
     data = np.asarray(data, np.uint8)
     n_pkts = max(1, (data.size + mtu - 1) // mtu)
+    tag, src, nsrc, frag_base = coll if coll is not None else (0, -1, 0, 0)
     pkts = []
     for i in range(n_pkts):
         chunk = data[i * mtu:(i + 1) * mtu]
@@ -156,7 +180,9 @@ def fragment_message(
             src_ip=src_ip, dst_ip=dst_ip, opcode=opc, qpn=qpn,
             psn=(start_psn + i) & PSN_MASK, ack_req=(i == n_pkts - 1),
             vaddr=vaddr if i == 0 else 0, rkey=rkey if i == 0 else 0,
-            dma_len=data.size if i == 0 else 0, payload=chunk.copy()))
+            dma_len=data.size if i == 0 else 0, payload=chunk.copy(),
+            coll_tag=tag, coll_src=src, coll_nsrc=nsrc,
+            coll_frag=(frag_base + i) if tag else -1))
     return pkts
 
 
@@ -170,6 +196,13 @@ def make_read_request(qpn: int, psn: int, vaddr: int, rkey: int,
 def make_ack(qpn: int, ack_psn: int, msn: int = 0, nak: bool = False) -> Packet:
     return Packet(opcode=NAK if nak else ACK, qpn=qpn,
                   psn=ack_psn & PSN_MASK, ack_psn=ack_psn & PSN_MASK, msn=msn)
+
+
+def make_nak_prot(qpn: int, psn: int = 0) -> Packet:
+    """Remote-access protection NAK: the wire rkey did not match the
+    registered buffer's rkey.  Fatal for the flow — the requester marks
+    the QP errored instead of retrying (retries can never succeed)."""
+    return Packet(opcode=NAK_PROT, qpn=qpn, psn=psn & PSN_MASK)
 
 
 def make_cnp(qpn: int, src_ip: int = 0, dst_ip: int = 0) -> Packet:

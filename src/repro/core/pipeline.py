@@ -57,6 +57,7 @@ class RxTables(NamedTuple):
     bytes_left: jax.Array  # (Q,) int64
     cur_vaddr: jax.Array   # (Q,) int64
     credits: jax.Array     # (Q,) int32   downstream capacity (§4.3)
+    rkey: jax.Array        # (Q,) int32   registered buffer's rkey (read-only)
 
 
 class RxResult(NamedTuple):
@@ -64,6 +65,7 @@ class RxResult(NamedTuple):
     dup: jax.Array         # (N,) bool   duplicate (re-ACK, no DMA)
     ooo: jax.Array         # (N,) bool   out-of-order (NAK)
     dropped_credit: jax.Array  # (N,) bool dropped for lack of credits
+    rkey_err: jax.Array    # (N,) bool   RETH rkey mismatch (NAK_PROT, no DMA)
     dma_addr: jax.Array    # (N,) int64  target address for accepted payloads
     dma_len: jax.Array     # (N,) int32
     ack_psn: jax.Array     # (N,) int32  cumulative ack to send back
@@ -103,9 +105,20 @@ def _rx_decide(state: Dict[str, jax.Array], p: Dict[str, jax.Array]
     dup = (psn - epsn) % (pk.PSN_MASK + 1) > (pk.PSN_MASK // 2)  # behind ePSN
     ooo = ~in_seq & ~dup
     has_credit = credits > 0
+    # remote-access protection (§4.6): a RETH-bearing packet must present
+    # the rkey of the registered buffer it targets; a mismatch is NAKed
+    # with a protection error instead of being served.  Table rkey 0
+    # means "nothing registered" (QPManager hands out rkeys from 1), so
+    # unarmed QPs — synthetic pipeline traces — keep accepting.
+    # MIDDLE/LAST fragments carry no RETH and inherit the verdict
+    # implicitly: a rejected FIRST never advances ePSN, so they fall
+    # out as OOO.
+    rkey_ok = ~has_reth | (state["rkey"] == 0) | (p["rkey"] == state["rkey"])
 
-    accept = is_payload & in_seq & has_credit & (p["valid"] > 0)
-    dropped_credit = is_payload & in_seq & ~has_credit & (p["valid"] > 0)
+    accept = is_payload & in_seq & has_credit & rkey_ok & (p["valid"] > 0)
+    dropped_credit = (is_payload & in_seq & ~has_credit & rkey_ok &
+                      (p["valid"] > 0))
+    rkey_err = is_payload & in_seq & ~rkey_ok & (p["valid"] > 0)
 
     # DMA command formation (RETH starts a region; MIDDLE/LAST continue it)
     start_addr = jnp.where(has_reth, p["vaddr"], state["cur_vaddr"])
@@ -124,10 +137,11 @@ def _rx_decide(state: Dict[str, jax.Array], p: Dict[str, jax.Array]
         "bytes_left": new_bytes,
         "cur_vaddr": new_cur,
         "credits": new_credits.astype(jnp.int32),
+        "rkey": state["rkey"],
     }
     out = {
         "accept": accept, "dup": dup & is_payload, "ooo": ooo & is_payload,
-        "dropped_credit": dropped_credit,
+        "dropped_credit": dropped_credit, "rkey_err": rkey_err,
         "dma_addr": dma_addr.astype(jnp.int32),
         "dma_len": plen.astype(jnp.int32),
         "ack_psn": jnp.where(accept, psn, (new_epsn - 1) & pk.PSN_MASK
@@ -147,8 +161,8 @@ def _rx_decide(state: Dict[str, jax.Array], p: Dict[str, jax.Array]
 
 
 _PKT_FIELDS = ("qpn", "opcode", "psn", "plen", "vaddr", "dma_len", "ack_req",
-               "ecn", "valid")
-_STATE_FIELDS = ("epsn", "msn", "bytes_left", "cur_vaddr", "credits")
+               "ecn", "rkey", "valid")
+_STATE_FIELDS = ("epsn", "msn", "bytes_left", "cur_vaddr", "credits", "rkey")
 
 
 def _rx_one(tables: RxTables, p) -> Tuple[RxTables, Dict]:
@@ -162,12 +176,16 @@ def _rx_one(tables: RxTables, p) -> Tuple[RxTables, Dict]:
     return tables, out
 
 
-def _ensure_ecn(batch: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
-    """Batches built before the ECN era lack the CE column; default it
-    to not-marked (trace-time branch, free under jit)."""
-    if "ecn" in batch:
-        return batch
-    return dict(batch, ecn=jnp.zeros(batch["qpn"].shape[0], jnp.int32))
+def _ensure_defaults(batch: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Batches built before the ECN / rkey-check eras lack those columns;
+    default them to not-marked / key-0 (trace-time branch, free under
+    jit; key 0 against the all-zero default rkey table passes, so legacy
+    traces keep their exact decisions)."""
+    n = batch["qpn"].shape[0]
+    for col in ("ecn", "rkey"):
+        if col not in batch:
+            batch = dict(batch, **{col: jnp.zeros(n, jnp.int32)})
+    return batch
 
 
 @jax.jit
@@ -176,7 +194,7 @@ def rx_pipeline(tables: RxTables, batch: Dict[str, jax.Array]
     """Per-packet oracle: scan the RX FSM over the batch in arrival
     order.  O(N) sequential steps — kept as the reference semantics the
     batched engine must reproduce bit-for-bit."""
-    batch = _ensure_ecn(batch)
+    batch = _ensure_defaults(batch)
 
     def body(t, i):
         p = {k: batch[k][i] for k in _PKT_FIELDS}
@@ -197,11 +215,11 @@ def rx_pipeline(tables: RxTables, batch: Dict[str, jax.Array]
 # Batched multi-QP engine
 # ---------------------------------------------------------------------------
 
-_OUT_KEYS = ("accept", "dup", "ooo", "dropped_credit", "dma_addr",
-             "dma_len", "ack_psn", "ack_qpn", "send_ack", "send_nak",
-             "ecn_echo")
-_OUT_BOOL = ("accept", "dup", "ooo", "dropped_credit", "send_ack",
+_OUT_KEYS = ("accept", "dup", "ooo", "dropped_credit", "rkey_err",
+             "dma_addr", "dma_len", "ack_psn", "ack_qpn", "send_ack",
              "send_nak", "ecn_echo")
+_OUT_BOOL = ("accept", "dup", "ooo", "dropped_credit", "rkey_err",
+             "send_ack", "send_nak", "ecn_echo")
 
 
 @jax.jit
@@ -237,7 +255,7 @@ def rx_pipeline_batched(tables: RxTables, batch: Dict[str, jax.Array]
     independent, so cross-QP reordering cannot change any decision);
     invalid (padding) lanes yield all-zero outputs.
     """
-    batch = _ensure_ecn(batch)
+    batch = _ensure_defaults(batch)
     n = batch["qpn"].shape[0]
     n_qps = tables.epsn.shape[0]
     w = min(n_qps, n)                       # static wave width
@@ -407,6 +425,7 @@ def make_rx_tables(n_qps: int, initial_credits: int = 64) -> RxTables:
         bytes_left=jnp.zeros(n_qps, jnp.int32),
         cur_vaddr=jnp.zeros(n_qps, jnp.int32),
         credits=jnp.full((n_qps,), initial_credits, jnp.int32),
+        rkey=jnp.zeros(n_qps, jnp.int32),
     )
 
 

@@ -59,6 +59,8 @@ class NodeStats:
     ecn_marked_rx: int = 0       # CE-marked payload packets seen (NP)
     cnp_tx: int = 0              # CNPs emitted (NP, after coalescing)
     cnp_rx: int = 0              # CNPs received (RP)
+    prot_errors: int = 0         # rkey mismatches NAKed at this responder
+    nak_prot_rx: int = 0         # protection NAKs received (requester side)
 
 
 CONGESTION_CONTROLS = ("ack_clocked", "static", "dcqcn")
@@ -96,10 +98,14 @@ class RdmaNode:
         self.sniffer = sniffer
         self.stats = NodeStats()
         self.qp_errors: set = set()                  # QPs dead on retry budget
+        self._fatal_qps: set = set()                 # protection errors: never
+                                                     # retransmit, only recover
         self._exhausted_seen = 0                     # retx.exhausted cursor
         self._completions: Dict[int, int] = {}       # qpn -> completed msgs
         self._qp_buffer: Dict[int, Tuple[int, np.ndarray]] = {}
         self._peer: Dict[int, int] = {}              # qpn -> remote node id
+        self._remote_rkey: Dict[int, int] = {}       # qpn -> peer buffer rkey
+        self._local_rkey: Dict[int, int] = {}        # qpn -> our buffer rkey
         self._read_pending: Dict[int, int] = {}      # qpn -> bytes expected
         self._last_nak_resend: Dict[int, int] = {}   # qpn -> tick
         self._last_cnp_sent: Dict[int, int] = {}     # qpn -> tick (coalescing)
@@ -124,54 +130,86 @@ class RdmaNode:
         self._peer[qpn_l] = remote.node_id
         remote._peer[qpn_r] = self.node_id
         # out-of-band: each side knows the peer's buffer under its own QP
-        self._remote_rkey = getattr(self, "_remote_rkey", {})
         self._remote_rkey[qpn_l] = rkey_r
-        remote._remote_rkey = getattr(remote, "_remote_rkey", {})
         remote._remote_rkey[qpn_r] = rkey_l
+        # ... and arms protection on its own: the RX pipeline checks every
+        # RETH against the registered rkey (host path: _on_read_request)
+        self._local_rkey[qpn_l] = rkey_l
+        remote._local_rkey[qpn_r] = rkey_r
+        self.rx_tables = self.rx_tables._replace(
+            rkey=self.rx_tables.rkey.at[qpn_l].set(rkey_l))
+        remote.rx_tables = remote.rx_tables._replace(
+            rkey=remote.rx_tables.rkey.at[qpn_r].set(rkey_r))
         return qpn_l, rkey_r, buf_l
 
-    def rdma_write(self, qpn: int, data: np.ndarray, remote_addr: int = 0):
+    def rdma_write(self, qpn: int, data: np.ndarray, remote_addr: int = 0,
+                   coll: Optional[Tuple[int, int, int]] = None):
         """One-sided WRITE of ``data`` into the peer's registered buffer.
         Messages larger than the flow-control window are chunked into
-        window-sized sub-messages so the ACK clock can pace them."""
-        self._submit(qpn, "write", remote_addr, np.asarray(data, np.uint8))
+        window-sized sub-messages so the ACK clock can pace them.
+
+        ``coll = (tag, src, nsrc)`` marks every packet of the message as
+        a collective CHUNK contribution for the in-fabric reduction
+        offload (``repro.core.collectives``): the switch absorbs tagged
+        contributions and forwards one summed stream per reduction slot.
+        Transport semantics are unchanged — tagged packets still ride
+        flow control, retransmission and pacing."""
+        self._submit(qpn, "write", remote_addr, np.asarray(data, np.uint8),
+                     coll=coll)
 
     def rdma_read(self, qpn: int, length: int, remote_addr: int = 0):
         """One-sided READ from the peer's buffer into ours."""
-        for passed in self.fc.request(qpn, 1, ("read", remote_addr, length)):
+        for passed in self.fc.request(qpn, 1,
+                                      ("read", remote_addr, length, None)):
             self._dispatch(qpn, passed[1])
 
     def check_completed(self, qpn: int) -> int:
         return self._completions.get(qpn, 0)
 
+    def expected_completions(self, nbytes: int) -> int:
+        """How many RX completions one ``rdma_write`` of ``nbytes``
+        produces at the peer (one per flow-control sub-message) —
+        collective schedules poll ``check_completed`` against this."""
+        return max(1, -(-max(nbytes, 1) // self._sub_message_bytes()))
+
     # -------------------------------------------------------- TX internals
+    def _sub_message_bytes(self) -> int:
+        """TX chunking policy: messages split into half-window-sized
+        sub-messages so the ACK clock can pace them (always a multiple
+        of the MTU, so collective fragment numbering stays aligned)."""
+        return max(1, (self.fc.cfg.window // 2)) * self.mtu
+
     def _submit(self, qpn: int, kind: str, remote_addr: int,
-                data: np.ndarray):
-        chunk_bytes = max(1, (self.fc.cfg.window // 2)) * self.mtu
+                data: np.ndarray, coll=None):
+        chunk_bytes = self._sub_message_bytes()
         for off in range(0, max(len(data), 1), chunk_bytes):
             chunk = data[off:off + chunk_bytes]
             n_pkts = pk.read_resp_npkts(len(chunk), self.mtu)
+            # sub-messages fragment independently, so collective fragment
+            # numbering continues across them (chunk_bytes % mtu == 0)
+            sub = None if coll is None else (*coll, off // self.mtu)
             for passed in self.fc.request(
-                    qpn, n_pkts, (kind, remote_addr + off, chunk)):
+                    qpn, n_pkts, (kind, remote_addr + off, chunk, sub)):
                 self._dispatch(qpn, passed[1])
 
     def _dispatch(self, qpn: int, item):
-        kind, addr, payload = item
+        kind, addr, payload, coll = item
         if kind == "read":
             self._emit_read_request(qpn, addr, payload)
         else:
             self._emit_message(qpn, addr, payload,
-                               op="write" if kind == "write" else "read_resp")
+                               op="write" if kind == "write" else "read_resp",
+                               coll=coll)
 
     def _emit_message(self, qpn: int, remote_addr: int,
-                      data: np.ndarray, op: str = "write"):
+                      data: np.ndarray, op: str = "write", coll=None):
         t = self.qp.tables
         start_psn = int(t.npsn[qpn])
         rkey = self._remote_rkey[qpn]
         pkts = pk.fragment_message(
             int(t.remote_qpn[qpn]), start_psn, remote_addr, rkey, data,
             op=op, mtu=self.mtu, src_ip=self.node_id,
-            dst_ip=int(t.remote_ip[qpn]))
+            dst_ip=int(t.remote_ip[qpn]), coll=coll)
         t.npsn[qpn] = (start_psn + len(pkts)) & pk.PSN_MASK
         for p in pkts:
             # retransmission buffer holds every payload until remote ACK
@@ -214,6 +252,8 @@ class RdmaNode:
                 self._on_ack(p)
             elif p.opcode == pk.NAK:
                 self._on_nak(p)
+            elif p.opcode == pk.NAK_PROT:
+                self._on_nak_prot(p)
             elif p.opcode == pk.CNP:
                 self._on_cnp(p)
             elif p.opcode == pk.READ_REQUEST:
@@ -285,6 +325,12 @@ class RdmaNode:
                                                  int(res["ack_psn"][i])))
             elif res["dropped_credit"][i]:
                 self.stats.credit_dropped += 1   # silent drop: peer retransmits
+            elif res["rkey_err"][i]:
+                # remote-access protection error: the wire rkey does not
+                # match the registered buffer — NAK fatally, serve nothing
+                self.stats.prot_errors += 1
+                self._send_ctrl(qpn, pk.make_nak_prot(
+                    self._remote_qpn(qpn), p.psn))
             elif res["ooo"][i]:
                 self.stats.ooo_nak += 1
                 self._send_ctrl(qpn, pk.make_ack(self._remote_qpn(qpn),
@@ -324,8 +370,20 @@ class RdmaNode:
 
     NAK_HOLDOFF = 8      # ticks: rate-limit go-back-N resend bursts
 
+    def _on_nak_prot(self, p: pk.Packet):
+        """Remote-access protection error: fatal for the QP.  Unlike a
+        sequence NAK there is nothing to retransmit — the rkey can never
+        become right by retrying — so the QP goes straight to the error
+        state (recover via ``reestablish_qp`` after re-exchanging keys)."""
+        qpn = self._local_qpn(p.qpn)
+        self.stats.nak_prot_rx += 1
+        self.qp_errors.add(qpn)
+        self._fatal_qps.add(qpn)
+
     def _on_nak(self, p: pk.Packet):
         qpn = self._local_qpn(p.qpn)
+        if qpn in self._fatal_qps:
+            return       # fatal QP: no more replays until re-established
         last = self._last_nak_resend.get(qpn, -10**9)
         if self.net.now - last < self.NAK_HOLDOFF:
             return       # a resend burst is already in flight
@@ -339,6 +397,8 @@ class RdmaNode:
         through the pacing bucket under DCQCN (the rate limiter sits at
         the wire: a resend burst must not re-congest the very queue
         whose overflow it is repairing)."""
+        if qpn in self._fatal_qps:
+            return       # fatal QP: hold fire until re-established
         if self.fc.rate is None:
             self.stats.retransmissions += 1
             self._send(qpn, rp)
@@ -353,6 +413,8 @@ class RdmaNode:
         if rate is None or not self._retx_staged:
             return
         for qpn in sorted(self._retx_staged):
+            if qpn in self._fatal_qps:
+                continue     # parked until reestablish_qp clears the stage
             q = self._retx_staged[qpn]
             while q and rate.take(qpn, 1):
                 self.stats.retransmissions += 1
@@ -362,8 +424,15 @@ class RdmaNode:
     def _on_read_request(self, p: pk.Packet):
         """Responder side of RDMA READ: stream the requested region
         through the same flow-control path as writes (the response
-        stream is ACK-clocked too)."""
+        stream is ACK-clocked too).  The wire rkey is validated against
+        the registered buffer first — a mismatch is NAKed with a
+        protection error instead of serving the read."""
         qpn = p.qpn                      # our local QPN (dst of the request)
+        if p.rkey != self._local_rkey.get(qpn):
+            self.stats.prot_errors += 1
+            self._send_ctrl(qpn, pk.make_nak_prot(self._remote_qpn(qpn),
+                                                  p.psn))
+            return
         buf = self._buffer_for(qpn)
         data = buf[p.vaddr:p.vaddr + p.dma_len] if buf is not None else \
             np.zeros(p.dma_len, np.uint8)
@@ -406,6 +475,7 @@ class RdmaNode:
         self._last_nak_resend.pop(qpn, None)
         self._last_cnp_sent.pop(qpn, None)
         self.qp_errors.discard(qpn)
+        self._fatal_qps.discard(qpn)
         self.qp.reestablish(qpn, start_psn)
         t = self.qp.tables
         # mirror the reset into the jitted RX/TX tables
@@ -445,10 +515,15 @@ def run_network(nodes: List[RdmaNode], max_ticks: int = 100_000,
         if not net.quiescent():
             return True
         for nd in nodes:
-            if any(nd.retx.outstanding(q) for q in nd.retx.slots):
+            # QPs dead on a protection error park their unacked slots
+            # until reestablish_qp — they are not live work (retrying can
+            # never succeed); retry-exhaustion QPs keep replaying their
+            # surviving slots exactly as before
+            if any(nd.retx.outstanding(q) for q in nd.retx.slots
+                   if q not in nd._fatal_qps):
                 return True
             if any(nd.fc.queue_depth(q) for q in range(len(nd.fc.pending))
-                   if nd.fc.pending[q]):
+                   if nd.fc.pending[q] and q not in nd._fatal_qps):
                 return True
         return False
 

@@ -12,6 +12,7 @@ from repro.kernels import aes_ecb as _aes
 from repro.kernels import crc32 as _crc
 from repro.kernels import dpi_mlp as _dpi
 from repro.kernels import preproc as _pre
+from repro.kernels import reduce as _red
 from repro.kernels.ref import expand_key  # noqa: F401  (re-export)
 
 
@@ -41,3 +42,9 @@ def preproc(recs: jax.Array, n_dense: int, modulus: int, *,
     if impl == "pallas":
         return _pre.preproc_pallas(recs, n_dense, modulus)
     return _pre.preproc_ref(recs, n_dense, modulus)
+
+
+def chunk_reduce(payload: jax.Array, *, dtype: str = "float32",
+                 impl: str = "pallas") -> jax.Array:
+    """Left-fold K collective payloads into one ((K, L) u8 -> (L,) u8)."""
+    return _red.chunk_reduce(payload, dtype=dtype, impl=impl)

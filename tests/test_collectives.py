@@ -1,0 +1,234 @@
+"""Collective subsystem tests: ring and offloaded schedules bit-
+identical to the jnp oracle across world sizes, odd chunk sizes, lossy
+fabrics (drops + retransmit) and reruns (determinism); tree broadcast;
+the switch reducer's transport bookkeeping."""
+import numpy as np
+import pytest
+
+from repro.core import packet as pk
+from repro.core.collectives import (AllreduceService, CollectiveGroup,
+                                    allreduce_oracle, make_ring_group)
+from repro.core.netsim import FabricConfig, SwitchedFabric
+
+LOSSY = FabricConfig(port_bandwidth=4, port_delay=2, queue_capacity=48,
+                     loss_prob=0.05, seed=21)
+
+
+def _tensors(world, n_elems, seed=7, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    if np.issubdtype(dtype, np.floating):
+        return [rng.standard_normal(n_elems).astype(dtype)
+                for _ in range(world)]
+    return [rng.integers(-10_000, 10_000, n_elems, dtype=dtype)
+            for _ in range(world)]
+
+
+def _bit_identical(a: np.ndarray, b: np.ndarray) -> bool:
+    return (np.ascontiguousarray(a).view(np.uint8)
+            == np.ascontiguousarray(b).view(np.uint8)).all()
+
+
+# ---------------------------------------------------------------------------
+# Allreduce == oracle, all modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("world", [2, 4, 8])
+@pytest.mark.parametrize("offload", [False, True])
+def test_allreduce_bit_identical_to_oracle(world, offload):
+    xs = _tensors(world, 1000 + world)       # odd: not divisible by world
+    g = make_ring_group(world, 1 << 16, offload=offload)
+    out = g.allreduce(xs)
+    want = allreduce_oracle(xs)
+    for r in range(world):
+        assert _bit_identical(out[r], want), f"rank {r}"
+    # plain-sum sanity: canonical fold == jnp.sum to float tolerance
+    np.testing.assert_allclose(want, np.sum(xs, axis=0),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_elems", [1, 5, 997])
+def test_allreduce_odd_chunk_sizes(n_elems):
+    """Tensors smaller than / not divisible by the world size exercise
+    padded chunks end to end."""
+    xs = _tensors(4, n_elems, seed=n_elems)
+    for offload in (False, True):
+        g = make_ring_group(4, 1 << 14, offload=offload)
+        out = g.allreduce(xs)
+        want = allreduce_oracle(xs)
+        assert all(_bit_identical(out[r], want) for r in range(4))
+
+
+def test_allreduce_int32_matches_plain_sum():
+    xs = _tensors(3, 777, dtype=np.int32)
+    g = make_ring_group(3, 1 << 14, dtype="int32")
+    out = g.allreduce(xs)
+    want = np.sum(xs, axis=0, dtype=np.int32)
+    assert all((o == want).all() for o in out)
+
+
+@pytest.mark.parametrize("offload", [False, True])
+def test_allreduce_lossy_fabric(offload):
+    """Drops + retransmission must not change a single bit."""
+    xs = _tensors(4, 20_000, seed=3)
+    g = make_ring_group(4, 1 << 18, fabric_cfg=LOSSY, offload=offload)
+    out = g.allreduce(xs)
+    want = allreduce_oracle(xs)
+    assert sum(n.stats.retransmissions for n in g.nodes) > 0, \
+        "lossy fabric produced no retransmissions — test is vacuous"
+    assert all(_bit_identical(out[r], want) for r in range(4))
+
+
+@pytest.mark.parametrize("offload", [False, True])
+def test_allreduce_deterministic_across_runs(offload):
+    """Two fresh groups on identically-seeded fabrics replay the same
+    ticks and the same bits."""
+    xs = _tensors(4, 5_000, seed=11)
+    runs = []
+    for _ in range(2):
+        g = make_ring_group(4, 1 << 16, fabric_cfg=LOSSY, offload=offload)
+        runs.append((g.allreduce(xs), g.stats.ticks))
+    (out_a, ticks_a), (out_b, ticks_b) = runs
+    assert ticks_a == ticks_b
+    for r in range(4):
+        assert _bit_identical(out_a[r], out_b[r])
+
+
+def test_ring_and_offload_agree_bitwise():
+    """The strongest form of the contract: the two schedules compute the
+    same association, so their outputs agree bit-for-bit."""
+    xs = _tensors(4, 9_999, seed=5)
+    ring = make_ring_group(4, 1 << 16, offload=False).allreduce(xs)
+    off = make_ring_group(4, 1 << 16, offload=True).allreduce(xs)
+    assert all(_bit_identical(a, b) for a, b in zip(ring, off))
+
+
+# ---------------------------------------------------------------------------
+# Reduce-scatter / allgather / broadcast
+# ---------------------------------------------------------------------------
+
+def test_reduce_scatter_shards():
+    xs = _tensors(4, 1002, seed=9)
+    g = make_ring_group(4, 1 << 14)
+    shards = g.reduce_scatter(xs)
+    want = allreduce_oracle(xs)
+    chunk = -(-1002 // 4)
+    for r in range(4):
+        lo, hi = r * chunk, min((r + 1) * chunk, 1002)
+        assert _bit_identical(shards[r], want[lo:hi]), f"rank {r}"
+
+
+def test_allgather_concatenates_in_rank_order():
+    shards = _tensors(4, 251, seed=13)
+    g = make_ring_group(4, 1 << 14)
+    out = g.allgather(shards)
+    want = np.concatenate(shards)
+    assert all(_bit_identical(o, want) for o in out)
+
+
+@pytest.mark.parametrize("world,root", [(2, 0), (4, 2), (5, 4), (8, 3)])
+def test_broadcast_tree(world, root):
+    rng = np.random.default_rng(root)
+    x = rng.standard_normal((17, 9)).astype(np.float32)
+    g = make_ring_group(world, 1 << 12)
+    out = g.broadcast(x, root=root)
+    assert len(out) == world
+    assert all(_bit_identical(o, x) for o in out)
+
+
+def test_broadcast_lossy():
+    x = np.random.default_rng(1).standard_normal(16_384).astype(np.float32)
+    g = make_ring_group(5, 1 << 17, fabric_cfg=FabricConfig(
+        port_bandwidth=4, port_delay=2, queue_capacity=48,
+        loss_prob=0.15, seed=21))
+    out = g.broadcast(x, root=1)
+    assert sum(n.stats.retransmissions for n in g.nodes) > 0
+    assert all(_bit_identical(o, x) for o in out)
+
+
+# ---------------------------------------------------------------------------
+# The transport ribbon: collectives ride the verbs, the offload rides
+# the switch
+# ---------------------------------------------------------------------------
+
+def test_offload_absorbs_at_the_hop():
+    """In-fabric reduction: the owner ports see ONE reduced chunk
+    instead of N-1, and the switch ACKs what it absorbs."""
+    xs = _tensors(4, 40_000, seed=2)
+    ring = make_ring_group(4, 1 << 18, offload=False)
+    ring.allreduce(xs)
+    off = make_ring_group(4, 1 << 18, offload=True)
+    off.allreduce(xs)
+    red = off.service.reducer
+    assert red.absorbed > 0 and red.acks_synthesized > 0
+    assert red.reduced_forwarded > 0
+    assert red.in_flight == 0                # nothing left held
+    # the reduce phase's data deliveries shrink: total payload packets
+    # delivered by the fabric drop vs. the pure ring at equal settings
+    ring_pkts = ring.net.total_delivered
+    off_pkts = off.net.total_delivered
+    assert off_pkts < ring_pkts, (off_pkts, ring_pkts)
+
+
+def test_offload_survives_dcqcn_pacing():
+    from repro.core.netsim import dcqcn_fabric_profile
+    xs = _tensors(4, 30_000, seed=8)
+    g = make_ring_group(4, 1 << 18, fabric_cfg=dcqcn_fabric_profile(),
+                        congestion_control="dcqcn", offload=True)
+    out = g.allreduce(xs)
+    want = allreduce_oracle(xs)
+    assert all(_bit_identical(out[r], want) for r in range(4))
+
+
+def test_completion_polling_is_exercised():
+    """Receivers account arriving sub-messages via check_completed —
+    the collective layer verifies every transfer against
+    expected_completions."""
+    g = make_ring_group(2, 1 << 14)
+    xs = _tensors(2, 512)
+    g.allreduce(xs)
+    # neighbor QPs saw completions on both sides
+    assert g.nodes[0].check_completed(g._qpn[0][1]) > 0
+    assert g.nodes[1].check_completed(g._qpn[1][0]) > 0
+
+
+def test_chunk_packets_are_tagged_and_untagged_paths_coexist():
+    """CHUNK tagging is per-write: untagged traffic on a reducer-armed
+    fabric still forwards normally (the allgather phase shares QPs with
+    carrier streams)."""
+    g = make_ring_group(4, 1 << 14, offload=True)
+    xs = _tensors(4, 512)
+    out = g.allreduce(xs)          # reduce offloaded, allgather plain ring
+    want = allreduce_oracle(xs)
+    assert all(_bit_identical(out[r], want) for r in range(4))
+    assert g.service.reducer.reduced_forwarded > 0
+
+
+def test_reducer_requires_registration():
+    """Tagged traffic without the control-plane QP map is a hard error
+    (misconfiguration must not silently corrupt)."""
+    fab = SwitchedFabric(2, FabricConfig())
+    svc = AllreduceService(fab, dtype="float32")
+    p = pk.Packet(opcode=pk.WRITE_ONLY, qpn=1, psn=0, src_ip=1,
+                  coll_tag=7, coll_src=0, coll_nsrc=2, coll_frag=0,
+                  ack_req=True, payload=np.zeros(8, np.uint8))
+    with pytest.raises(RuntimeError, match="no QP registered"):
+        svc.reducer.on_packet(0, p)
+
+
+def test_fabric_rejects_second_reducer():
+    """Silently replacing an attached reducer would strand the first
+    group's tagged traffic on the wrong control plane."""
+    fab = SwitchedFabric(2, FabricConfig())
+    AllreduceService(fab, dtype="float32")
+    with pytest.raises(RuntimeError, match="already has a reducer"):
+        AllreduceService(fab, dtype="int32")
+
+
+def test_group_validates_inputs():
+    g = make_ring_group(2, 1 << 10)
+    with pytest.raises(ValueError):
+        g.allreduce([np.zeros(3, np.float32), np.zeros(4, np.float32)])
+    with pytest.raises(ValueError):
+        g.allreduce([np.zeros((1 << 12), np.float32)] * 2)  # > max_bytes
+    with pytest.raises(ValueError):
+        CollectiveGroup(g.nodes[:1], 1024)

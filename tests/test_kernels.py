@@ -179,3 +179,50 @@ def test_preproc_semantics():
     dense = out[:, :3].view(np.float32)[0]
     np.testing.assert_allclose(dense, [0.0, 0.0, np.log1p(99)], rtol=1e-6)
     assert out[0, 3] == 12345 % 100
+
+
+# ---------------------------------------------------------------------------
+# Segmented reduce (collective offload math)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 8), words=st.integers(1, 1200),
+       seed=st.integers(0, 2**31))
+def test_chunk_reduce_pallas_bit_identical_to_ref(k, words, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((k, words)).astype(np.float32)
+    u8 = np.ascontiguousarray(x).view(np.uint8).reshape(k, words * 4)
+    a = np.asarray(ops.chunk_reduce(jnp.asarray(u8), impl="pallas"))
+    b = np.asarray(ops.chunk_reduce(jnp.asarray(u8), impl="ref"))
+    assert (a == b).all()
+    # and the ref is the honest left fold
+    acc = jnp.asarray(x[0])
+    for i in range(1, k):
+        acc = acc + x[i]
+    assert (b.view(np.float32) == np.asarray(acc)).all()
+
+
+def test_chunk_reduce_int32_exact():
+    rng = np.random.default_rng(0)
+    x = rng.integers(-(1 << 20), 1 << 20, (5, 333), dtype=np.int32)
+    u8 = x.view(np.uint8).reshape(5, 333 * 4)
+    for impl in ("pallas", "ref"):
+        out = np.asarray(ops.chunk_reduce(jnp.asarray(u8), dtype="int32",
+                                          impl=impl))
+        assert (out.view(np.int32) == x.sum(0, dtype=np.int32)).all()
+
+
+def test_chunk_reduce_order_matters_and_is_pinned():
+    """Float fold order is part of the contract: reversing the rows
+    changes bits (non-associativity is real on this data), while the
+    same rows always fold identically."""
+    rng = np.random.default_rng(4)
+    x = (rng.standard_normal((4, 256)) * 10.0**rng.integers(
+        -6, 6, (4, 256))).astype(np.float32)
+    u8 = np.ascontiguousarray(x).view(np.uint8).reshape(4, 1024)
+    a = np.asarray(ops.chunk_reduce(jnp.asarray(u8), impl="ref"))
+    b = np.asarray(ops.chunk_reduce(jnp.asarray(u8[::-1].copy()),
+                                    impl="ref"))
+    assert (a == np.asarray(ops.chunk_reduce(jnp.asarray(u8),
+                                             impl="ref"))).all()
+    assert not (a == b).all()

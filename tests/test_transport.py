@@ -233,3 +233,74 @@ def test_rx_pipeline_credit_drop():
     assert list(np.asarray(res.dropped_credit)) == [False, True]
     # ePSN did NOT advance for the dropped packet -> retransmit lands in-seq
     assert int(t.epsn[1]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Remote-access protection (rkey validation)
+# ---------------------------------------------------------------------------
+
+def test_write_wrong_rkey_naks_protection_error():
+    """A WRITE presenting a bogus rkey is NAKed fatally: nothing is
+    DMA'd, the responder counts a protection error, and the requester's
+    QP goes to the error state instead of retrying forever."""
+    net = Network(2, LinkConfig(latency_ticks=2, seed=1))
+    a, b = RdmaNode(0, net), RdmaNode(1, net)
+    qpn_a, _, _ = a.init_rdma(1 << 12, b)
+    a._remote_rkey[qpn_a] = 0xBAD            # corrupt the exchanged key
+    data = np.arange(256, dtype=np.uint8)
+    a.rdma_write(qpn_a, data)
+    run_network([a, b], max_ticks=5_000)
+    assert b.stats.prot_errors >= 1
+    assert b.stats.accepted == 0
+    assert (b._qp_buffer[1][1] == 0).all()   # buffer untouched
+    assert a.stats.nak_prot_rx >= 1
+    assert a.qp_error(qpn_a)
+    # recovery path: re-exchange (fix the key) + reestablish both ends
+    a._remote_rkey[qpn_a] = b._local_rkey[1]
+    a.reestablish_qp(qpn_a)
+    b.reestablish_qp(1)
+    a.rdma_write(qpn_a, data)
+    run_network([a, b], max_ticks=5_000)
+    assert not a.qp_error(qpn_a)
+    np.testing.assert_array_equal(b._qp_buffer[1][1][:256], data)
+
+
+def test_read_wrong_rkey_not_served():
+    """_on_read_request validates the wire rkey against the registered
+    buffer instead of trusting it: a bogus key gets NAK_PROT and zero
+    response packets."""
+    net = Network(2, LinkConfig(latency_ticks=2, seed=2))
+    a, b = RdmaNode(0, net), RdmaNode(1, net)
+    qpn_a, _, _ = a.init_rdma(1 << 12, b)
+    secret = np.random.default_rng(3).integers(0, 256, 512, dtype=np.uint8)
+    b._qp_buffer[1][1][:512] = secret        # responder-side data
+    a._remote_rkey[qpn_a] = 0xBAD
+    a.rdma_read(qpn_a, 512)
+    run_network([a, b], max_ticks=5_000)
+    assert b.stats.prot_errors == 1
+    assert a.stats.nak_prot_rx >= 1
+    assert a.qp_error(qpn_a)
+    assert a.check_completed(qpn_a) == 0     # no response stream
+    assert (a._qp_buffer[qpn_a][1][:512] == 0).all()
+
+
+def test_rx_pipeline_rkey_mismatch_flags_not_accepts():
+    """In-graph protection check (both engines share it): a RETH packet
+    with the wrong rkey raises rkey_err, leaves ePSN alone, and does
+    not consume a credit."""
+    t = pipe.make_rx_tables(4, initial_credits=16)
+    t = t._replace(rkey=t.rkey.at[1].set(77))
+    pkts = [pk.Packet(opcode=pk.WRITE_ONLY, qpn=1, psn=0, vaddr=0,
+                      rkey=42, dma_len=8, ack_req=True,
+                      payload=np.arange(8, dtype=np.uint8))]
+    b = pk.batch_from_packets(pkts)
+    b = {k: jnp.asarray(v) for k, v in b.items()}
+    t, res = pipe.rx_pipeline(t, b)
+    assert bool(res.rkey_err[0]) and not bool(res.accept[0])
+    assert int(t.epsn[1]) == 0
+    assert int(t.credits[1]) == 16
+    # the right key sails through
+    pkts[0].rkey = 77
+    b2 = pk.batch_from_packets(pkts)
+    t, res = pipe.rx_pipeline(t, {k: jnp.asarray(v) for k, v in b2.items()})
+    assert bool(res.accept[0]) and not bool(res.rkey_err[0])
