@@ -1,7 +1,9 @@
 """The paper's §8 use case, end to end: DLRM online training where every
-batch streams from disaggregated storage over BALBOA RDMA, is
-preprocessed ON THE DATAPATH (Neg2Zero -> Log, Modulus), and lands
-directly in device memory — the CPU never touches a feature byte.
+batch STREAMS from disaggregated storage over BALBOA RDMA — striped
+across all replicas on concurrent QPs, preprocessed tile-by-tile ON THE
+DATAPATH the moment bytes are acknowledged (Neg2Zero -> Log, Modulus),
+and landed directly in pre-sharded device buffers.  The CPU never
+touches a feature byte: ``decode_fn`` is poisoned to prove it.
 
   PYTHONPATH=src python examples/dlrm_ingest.py
 """
@@ -12,8 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.dlrm import smoke_config
-from repro.core.ingest import BalboaIngest, IngestConfig
-from repro.core.services import PreprocService, ServiceChain
+from repro.core.ingest import (BalboaIngest, IngestConfig,
+                               make_dlrm_tile_decoder)
 from repro.data import synthetic as syn
 from repro.models.dlrm import DLRM
 
@@ -22,49 +24,28 @@ def main():
     cfg = smoke_config()
     rec_w = cfg.n_dense + cfg.n_sparse
     recs_per_pkt = (4096 // 4) // rec_w
-    n_rec = recs_per_pkt * 8          # 8 packets per shard
+    n_pkts = 8                        # packets per shard
+    n_rec = recs_per_pkt * n_pkts
 
     # --- storage shards: RAW records (negative dense, unbounded sparse)
+    # in the record-aligned packet layout the stripes preserve
     def shard_fn(i):
-        return syn.encode_dlrm_shard(
+        return syn.encode_dlrm_packets(
             syn.dlrm_shard(i, n_rec, cfg.n_dense, cfg.n_sparse))
 
-    # --- the on-datapath service: the paper's preprocessing pipeline
-    # NOTE the shard header (3 int32 words) rides in front; the service
-    # rewrites whole records, so we align shards to record boundaries by
-    # padding the header to one full record (see encode/decode).
-    chain = ServiceChain(on_path=[PreprocService(
-        n_dense=cfg.n_dense, n_sparse=cfg.n_sparse, modulus=cfg.modulus)])
+    def poisoned_decode(raw):
+        raise AssertionError("host decode touched payload bytes")
 
-    # The stream is fragmented at MTU boundaries; the on-path service
-    # frames records per packet, so the storage layout is RECORD-ALIGNED
-    # to the MTU (26 records + pad per 4 KB packet) — on the FPGA this
-    # alignment is what the FIRST/MIDDLE/LAST stream reassembly gives the
-    # offload for free.
-    n_pkts = 8
-    pad_w = (4096 // 4) - recs_per_pkt * rec_w
-
-    def shard_records_only(i):
-        raw = syn.dlrm_shard(i, n_rec, cfg.n_dense, cfg.n_sparse)
-        buf = np.zeros((n_pkts, 4096 // 4), np.int32)
-        for p in range(n_pkts):
-            chunk = raw[p * recs_per_pkt:(p + 1) * recs_per_pkt]
-            buf[p, :recs_per_pkt * rec_w] = chunk.reshape(-1)
-        return buf.reshape(-1).view(np.uint8)
-
-    def decode_fn(raw):
-        words = np.frombuffer(raw.tobytes(), np.int32).reshape(
-            n_pkts, 4096 // 4)
-        recs = np.concatenate([
-            words[p, :recs_per_pkt * rec_w].reshape(recs_per_pkt, rec_w)
-            for p in range(n_pkts)])
-        dense = recs[:, :cfg.n_dense].copy().view(np.float32)
-        sparse = recs[:, cfg.n_dense:]
-        return {"dense": dense, "sparse": sparse}
-
+    # Streaming ingest: 2 replicas x 2 QPs, 2-packet fragment tiles.
+    # Preprocessing runs per tile (the fused Pallas kernel) as each
+    # tile's bytes are acknowledged — process-as-it-arrives.
     ing = BalboaIngest(
-        IngestConfig(batch_bytes=8 * 4096, n_storage_nodes=2),
-        chain, shard_records_only, decode_fn)
+        IngestConfig(batch_bytes=n_pkts * 4096, n_storage_nodes=2,
+                     qps_per_node=2, tile_pkts=2,
+                     link_bw_pkts_per_tick=1),
+        None, shard_fn, decode_fn=poisoned_decode,
+        tile_to_batch=make_dlrm_tile_decoder(cfg.n_dense, cfg.n_sparse,
+                                             cfg.modulus))
 
     model = DLRM(cfg)
     params = model.init_params(jax.random.key(0))
@@ -76,14 +57,18 @@ def main():
         return p, l, m["acc"]
 
     t0 = time.time()
-    losses = []
-    for i, dev_batch in enumerate(ing.batches(30)):
+    losses, goodputs, overlaps = [], [], []
+    for i, (dev_batch, rep) in enumerate(ing.stream_batches(30)):
+        goodputs.append(rep.goodput_bytes_per_tick)
+        overlaps.append(rep.overlap_efficiency)
+        # labels are control-plane metadata (derived from the synthetic
+        # rule), not payload bytes
         raw = syn.dlrm_shard(i, n_rec, cfg.n_dense, cfg.n_sparse)
         labels = syn.dlrm_labels(raw, cfg.n_dense, cfg.modulus)
-        batch = {"dense": jnp.asarray(dev_batch["dense"]),
-                 "sparse": jnp.asarray(dev_batch["sparse"]),
+        batch = {"dense": dev_batch["dense"],
+                 "sparse": dev_batch["sparse"],
                  "label": jnp.asarray(labels)}
-        # sanity: on-path preprocessing matches the reference
+        # sanity: tile-granular on-arrival preprocessing == reference
         want = np.log1p(np.maximum(raw[:, :cfg.n_dense], 0))
         np.testing.assert_allclose(np.asarray(batch["dense"]), want,
                                    rtol=1e-5)
@@ -92,13 +77,17 @@ def main():
         losses.append(float(loss))
         if i % 10 == 0:
             print(f"[dlrm] shard {i}: loss {float(loss):.4f} "
-                  f"acc {float(acc):.3f}")
+                  f"acc {float(acc):.3f} "
+                  f"goodput {rep.goodput_bytes_per_tick:.0f} B/tick "
+                  f"overlap {rep.overlap_efficiency:.2f}")
     dt = time.time() - t0
     print(f"[dlrm] 30 shards ({30*n_rec} records) in {dt:.1f}s; "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
-          f"CPU never touched a feature byte (service chain: "
-          f"{chain.describe()})")
+          f"mean goodput {np.mean(goodputs):.0f} B/tick, "
+          f"mean overlap {np.mean(overlaps):.2f}; "
+          f"host payload bytes copied: {ing.host_payload_bytes}")
     assert losses[-1] < losses[0]
+    assert ing.host_payload_bytes == 0
     print("dlrm_ingest OK")
 
 

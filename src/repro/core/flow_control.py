@@ -249,10 +249,27 @@ class AckClockedFlowControl:
         return len(self.pending[qpn])
 
 
+@dataclasses.dataclass(frozen=True)
+class CreditLedger:
+    """Read-only per-QP view of the credit ledger — the backpressure
+    signal a striped consumer (one stripe = one QP in
+    ``repro.core.ingest``) reads to see where the receive side is
+    gating the stream."""
+    qpn: int
+    credits: int             # currently available
+    max_credits: int
+    accepted: int            # payloads this QP's credits admitted
+    dropped: int             # payloads dropped for want of a credit
+
+
 class CreditManager:
     """RX-side crediting: the host-facing datapath grants consumption
     capacity; a packet consuming a credit that is not there is dropped
-    (paper §4.3 — rely on remote retransmission, never stall)."""
+    (paper §4.3 — rely on remote retransmission, never stall).
+
+    Accounting is kept per QP (``ledger``) as well as in the aggregate
+    counters, so stripe-per-QP consumers can attribute backpressure to
+    individual stripes."""
 
     def __init__(self, n_qps: int, initial_credits: int = 64,
                  max_credits: int = 64):
@@ -261,13 +278,32 @@ class CreditManager:
         self.dropped_no_credit = 0
         self.accepted = 0
         self.granted = n_qps * initial_credits
+        self.accepted_per_qp = [0] * n_qps
+        self.dropped_per_qp = [0] * n_qps
+
+    def note_accepted(self, qpn: int, n: int = 1):
+        """Record ``n`` payloads admitted on ``qpn`` (called by the RX
+        path when the in-graph credit gate accepted the packet)."""
+        self.accepted += n
+        self.accepted_per_qp[qpn] += n
+
+    def note_dropped(self, qpn: int, n: int = 1):
+        """Record ``n`` payloads dropped on ``qpn`` for want of credit."""
+        self.dropped_no_credit += n
+        self.dropped_per_qp[qpn] += n
+
+    def ledger(self, qpn: int) -> CreditLedger:
+        return CreditLedger(qpn=qpn, credits=self.credits[qpn],
+                            max_credits=self.max_credits,
+                            accepted=self.accepted_per_qp[qpn],
+                            dropped=self.dropped_per_qp[qpn])
 
     def try_consume(self, qpn: int, n: int = 1) -> bool:
         if self.credits[qpn] >= n:
             self.credits[qpn] -= n
-            self.accepted += n
+            self.note_accepted(qpn, n)
             return True
-        self.dropped_no_credit += n
+        self.note_dropped(qpn, n)
         return False
 
     def replenish(self, qpn: int, n: int = 1):

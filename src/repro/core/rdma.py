@@ -104,6 +104,14 @@ class RdmaNode:
         self._completions: Dict[int, int] = {}       # qpn -> completed msgs
         self._qp_buffer: Dict[int, Tuple[int, np.ndarray]] = {}
         self._peer: Dict[int, int] = {}              # qpn -> remote node id
+        # contiguous-byte completion watermark per QP: the highest byte
+        # offset of the registered buffer such that every byte below it
+        # has been accepted by the RX pipeline.  PSN checking accepts
+        # strictly in order, so ``dma_addr + dma_len`` of the newest
+        # accepted payload IS the contiguous frontier — streaming
+        # consumers (``repro.core.ingest``) poll it between network
+        # ticks to hand completed fragment tiles onward mid-transfer.
+        self._rx_progress: Dict[int, int] = {}       # qpn -> bytes landed
         self._remote_rkey: Dict[int, int] = {}       # qpn -> peer buffer rkey
         self._local_rkey: Dict[int, int] = {}        # qpn -> our buffer rkey
         self._read_pending: Dict[int, int] = {}      # qpn -> bytes expected
@@ -165,6 +173,24 @@ class RdmaNode:
 
     def check_completed(self, qpn: int) -> int:
         return self._completions.get(qpn, 0)
+
+    def remote_qpn(self, qpn: int) -> int:
+        """The peer QPN this local QP is connected to (from the
+        connection table ``init_rdma`` filled in) — callers must derive
+        the remote end from here, never by inspecting the peer's
+        buffer dict."""
+        return self._remote_qpn(qpn)
+
+    def rx_progress(self, qpn: int) -> int:
+        """Contiguous bytes landed in this QP's registered buffer since
+        the last ``reset_rx_progress`` — the completion watermark a
+        streaming consumer polls between ``step_network`` ticks."""
+        return self._rx_progress.get(qpn, 0)
+
+    def reset_rx_progress(self, qpn: int):
+        """Re-arm the watermark before issuing a new transfer whose DMA
+        addresses restart at the buffer base."""
+        self._rx_progress.pop(qpn, None)
 
     def expected_completions(self, nbytes: int) -> int:
         """How many RX completions one ``rdma_write`` of ``nbytes``
@@ -310,7 +336,11 @@ class RdmaNode:
                     a = int(res["dma_addr"][i])
                     ln = int(res["dma_len"][i])
                     buf[a:a + ln] = payload[i][:ln]
-                self.credits.accepted += 1
+                    # in-order acceptance makes this the contiguous
+                    # frontier (max against replays of acked data)
+                    self._rx_progress[qpn] = max(
+                        self._rx_progress.get(qpn, 0), a + ln)
+                self.credits.note_accepted(qpn)
                 # host consumes the payload -> credit returns (paper §4.3)
                 self._replenish_credit(qpn)
                 if res["send_ack"][i]:
@@ -325,6 +355,7 @@ class RdmaNode:
                                                  int(res["ack_psn"][i])))
             elif res["dropped_credit"][i]:
                 self.stats.credit_dropped += 1   # silent drop: peer retransmits
+                self.credits.note_dropped(qpn)
             elif res["rkey_err"][i]:
                 # remote-access protection error: the wire rkey does not
                 # match the registered buffer — NAK fatally, serve nothing
@@ -474,6 +505,7 @@ class RdmaNode:
         self.fc.budget[qpn] = self.fc.cfg.window
         self._last_nak_resend.pop(qpn, None)
         self._last_cnp_sent.pop(qpn, None)
+        self._rx_progress.pop(qpn, None)
         self.qp_errors.discard(qpn)
         self._fatal_qps.discard(qpn)
         self.qp.reestablish(qpn, start_psn)
@@ -504,38 +536,51 @@ class RdmaNode:
         self._send(local_qpn, p)
 
 
+def step_network(nodes: List[RdmaNode]) -> None:
+    """Advance the simulation by exactly ONE tick: deliver in-flight
+    packets to their destination nodes, then run every node's timer
+    tick.  The incremental unit ``run_network`` is built from — and the
+    primitive streaming consumers (``repro.core.ingest``) interleave
+    with completion-watermark polls to process data *as it arrives*
+    instead of store-and-forwarding whole transfers."""
+    net = nodes[0].net
+    delivered = net.tick()
+    for (src, dst), pkts in delivered.items():
+        if pkts:
+            nodes[dst].on_packets(pkts)
+    for nd in nodes:
+        nd.tick()
+
+
+def network_pending(nodes: List[RdmaNode]) -> bool:
+    """True while any transport work remains: packets in flight, unacked
+    payloads awaiting (re)transmission, or queued flow-control requests.
+    QPs dead on a protection error park their unacked slots until
+    ``reestablish_qp`` — they are not live work (retrying can never
+    succeed); retry-exhaustion QPs keep replaying their surviving slots
+    exactly as before."""
+    net = nodes[0].net
+    if not net.quiescent():
+        return True
+    for nd in nodes:
+        if any(nd.retx.outstanding(q) for q in nd.retx.slots
+               if q not in nd._fatal_qps):
+            return True
+        if any(nd.fc.queue_depth(q) for q in range(len(nd.fc.pending))
+               if nd.fc.pending[q] and q not in nd._fatal_qps):
+            return True
+    return False
+
+
 def run_network(nodes: List[RdmaNode], max_ticks: int = 100_000,
                 idle_done: int = 8) -> int:
     """Drive the simulation until quiescent: no packets in flight, no
     unacked payloads awaiting (re)transmission, no queued flow-control
     requests.  Returns ticks elapsed."""
-    net = nodes[0].net
-
-    def work_pending() -> bool:
-        if not net.quiescent():
-            return True
-        for nd in nodes:
-            # QPs dead on a protection error park their unacked slots
-            # until reestablish_qp — they are not live work (retrying can
-            # never succeed); retry-exhaustion QPs keep replaying their
-            # surviving slots exactly as before
-            if any(nd.retx.outstanding(q) for q in nd.retx.slots
-                   if q not in nd._fatal_qps):
-                return True
-            if any(nd.fc.queue_depth(q) for q in range(len(nd.fc.pending))
-                   if nd.fc.pending[q] and q not in nd._fatal_qps):
-                return True
-        return False
-
     idle = 0
     for t in range(max_ticks):
-        delivered = net.tick()
-        for (src, dst), pkts in delivered.items():
-            if pkts:
-                nodes[dst].on_packets(pkts)
-        for nd in nodes:
-            nd.tick()
-        if work_pending():
+        step_network(nodes)
+        if network_pending(nodes):
             idle = 0
         else:
             idle += 1

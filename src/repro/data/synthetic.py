@@ -86,6 +86,25 @@ def decode_dlrm_shard(raw: np.ndarray) -> Dict[str, np.ndarray]:
     return {"records": recs}
 
 
+def encode_dlrm_packets(recs: np.ndarray, mtu: int = 4096) -> np.ndarray:
+    """Pack records into an MTU-ALIGNED packet stream: each packet
+    carries as many whole records as fit (``(mtu//4) // record_words``),
+    zero-padded to the packet boundary.  This is the record-aligned
+    layout the streaming ingest stripes across QPs — no record ever
+    straddles a packet (or stripe) boundary, so per-packet services and
+    per-tile kernels rewrite whole records only.  The inverse transform
+    is device-side: ``repro.core.ingest.make_dlrm_tile_decoder``."""
+    n, w = recs.shape
+    words = mtu // 4
+    rpp = words // w                  # records per packet
+    n_pkts = -(-n // rpp)
+    buf = np.zeros((n_pkts, words), np.int32)
+    for p in range(n_pkts):
+        chunk = recs[p * rpp:(p + 1) * rpp]
+        buf[p, :chunk.size] = chunk.reshape(-1)
+    return buf.reshape(-1).view(np.uint8)
+
+
 def decode_preprocessed_dlrm(raw: np.ndarray, n_dense: int
                              ) -> Dict[str, np.ndarray]:
     """Decode a shard whose record payload already passed the on-path

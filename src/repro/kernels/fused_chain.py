@@ -109,6 +109,27 @@ def fused_decrypt_dpi_pallas(payload: jax.Array, round_keys,
     return out[:n].astype(jnp.uint8), score[:n, 0]
 
 
+def fused_decrypt_dpi_tile(payload: jax.Array, round_keys,
+                           dpi_params: Dict, *, tile_pkts: int = BLOCK_N,
+                           interpret: bool = INTERPRET
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Tile-granular streaming entry: run the fused decrypt+DPI pass over
+    one fragment tile of at most ``tile_pkts`` packets as it arrives.
+
+    Pads to the fixed ``(tile_pkts, MTU)`` shape so every mid-stream call
+    hits one compiled executable (the streaming ingest hands tiles over
+    the moment their bytes are acknowledged, including a short final
+    tile).  Bit-identical per row to the one-shot ``fused_decrypt_dpi_
+    pallas`` — AES and the DPI MLP are row-independent."""
+    n = payload.shape[0]
+    if n > tile_pkts:
+        raise ValueError(f"tile carries {n} packets > tile_pkts={tile_pkts}")
+    x = jnp.pad(payload, ((0, tile_pkts - n), (0, 0)))
+    out, score = fused_decrypt_dpi_pallas(x, round_keys, dpi_params,
+                                          interpret=interpret)
+    return out[:n], score[:n]
+
+
 def fused_decrypt_dpi_ref(payload: jax.Array, round_keys, dpi_params: Dict
                           ) -> Tuple[jax.Array, jax.Array]:
     """Two-pass oracle: decrypt, then DPI-score the plaintext."""

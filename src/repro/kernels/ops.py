@@ -44,6 +44,14 @@ def preproc(recs: jax.Array, n_dense: int, modulus: int, *,
     return _pre.preproc_ref(recs, n_dense, modulus)
 
 
+def preproc_tile(recs: jax.Array, n_dense: int, modulus: int, *,
+                 tile_recs: int = None) -> jax.Array:
+    """Streaming (fixed-shape) preproc over one fragment tile — pads to
+    ``tile_recs`` so mid-stream calls never recompile."""
+    kw = {} if tile_recs is None else {"tile_recs": tile_recs}
+    return _pre.preproc_tile(recs, n_dense, modulus, **kw)
+
+
 def chunk_reduce(payload: jax.Array, *, dtype: str = "float32",
                  impl: str = "pallas") -> jax.Array:
     """Left-fold K collective payloads into one ((K, L) u8 -> (L,) u8)."""

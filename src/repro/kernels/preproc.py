@@ -53,4 +53,25 @@ def preproc_pallas(recs: jax.Array, n_dense: int, modulus: int, *,
     return out[:m]
 
 
+def preproc_tile(recs: jax.Array, n_dense: int, modulus: int, *,
+                 tile_recs: int = BLOCK_M,
+                 interpret: bool = INTERPRET) -> jax.Array:
+    """Tile-granular streaming entry: preprocess one fragment tile of at
+    most ``tile_recs`` records the moment its bytes are acknowledged.
+
+    A streaming ingest hands tiles over mid-transfer, so the tile is
+    padded to the fixed ``(tile_recs, record)`` shape before entering the
+    jitted kernel — every mid-stream call reuses ONE compiled executable
+    regardless of how many records the final (short) tile carries.
+    Numerics are identical to the one-shot ``preproc_pallas`` over the
+    same rows (same kernel, element-wise), which is what lets streamed
+    output be diffed bit-for-bit against the one-shot oracle."""
+    n = recs.shape[0]
+    if n > tile_recs:
+        raise ValueError(f"tile carries {n} records > tile_recs={tile_recs}")
+    x = jnp.pad(recs, ((0, tile_recs - n), (0, 0)))
+    out = preproc_pallas(x, n_dense, modulus, interpret=interpret)
+    return out[:n]
+
+
 preproc_ref = R.preproc_ref

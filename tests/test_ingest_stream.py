@@ -1,0 +1,341 @@
+"""Streaming ingest (paper §8: process-as-it-arrives RDMA -> device).
+
+What must hold:
+  * streamed preproc output is BIT-identical to the one-shot oracle
+    (same records through one `preproc_ref` call), with and without
+    striping, loss, short final tiles, and the on-path service variant;
+  * a replica dying MID-stream costs a re-fetch of only ITS stripes
+    (per-stripe failover), and the payload still comes out identical;
+  * transport ticks and tile kernel hand-offs interleave (the overlap
+    the paper's deep pipeline buys);
+  * payload bytes never pass through a host-side decode copy — enforced
+    by poisoning ``decode_fn`` and counting ``host_payload_bytes``;
+  * remote QPNs come from the connection table, so storage nodes can
+    hold several QPs (striping's prerequisite);
+  * the RX credit ledger is visible per stripe.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.ingest import (BalboaIngest, IngestConfig,
+                               make_dlrm_tile_decoder)
+from repro.core.services import PreprocService, ServiceChain
+from repro.data import synthetic as syn
+from repro.kernels.preproc import preproc_ref
+
+N_DENSE, N_SPARSE, MOD = 13, 26, 1000
+REC_W = N_DENSE + N_SPARSE
+RPP = (4096 // 4) // REC_W            # records per packet
+MTU = 4096
+
+
+def _shard_fn(n_pkts):
+    return lambda i: syn.encode_dlrm_packets(
+        syn.dlrm_shard(i, RPP * n_pkts, N_DENSE, N_SPARSE))
+
+
+def _oracle(index, n_pkts):
+    """One-shot path: all records through one preproc call."""
+    raw = syn.dlrm_shard(index, RPP * n_pkts, N_DENSE, N_SPARSE)
+    return np.asarray(preproc_ref(jnp.asarray(raw), N_DENSE, MOD))
+
+
+def _assert_matches_oracle(batch, index, n_pkts):
+    want = _oracle(index, n_pkts)
+    got_dense = np.asarray(batch["dense"])[:RPP * n_pkts]
+    got_sparse = np.asarray(batch["sparse"])[:RPP * n_pkts]
+    # bit-level: compare the dense f32 through its exact bit pattern
+    np.testing.assert_array_equal(got_dense.view(np.int32),
+                                  want[:, :N_DENSE])
+    np.testing.assert_array_equal(got_sparse, want[:, N_DENSE:])
+
+
+def _poison(raw):
+    raise AssertionError("decode_fn touched payload bytes on the host")
+
+
+def test_streamed_bit_identity_vs_oneshot_oracle():
+    n_pkts = 16
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=2,
+                     tile_pkts=2),
+        None, _shard_fn(n_pkts), decode_fn=_poison,
+        tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, MOD))
+    batch, rep = ing.fetch_shard_streaming(3)
+    _assert_matches_oracle(batch, 3, n_pkts)
+    assert rep.tiles == n_pkts // 2
+    assert rep.refetches == 0
+    # the poisoned decode_fn never fired and no payload byte crossed a
+    # host-side decode copy
+    assert ing.host_payload_bytes == 0
+
+
+def test_streamed_bit_identity_with_onpath_service():
+    """Same oracle, but preprocessing happens INSIDE the RX pipeline
+    (on-path service); the tile decoder then only splits columns."""
+    n_pkts = 8
+    chain = ServiceChain(on_path=[PreprocService(
+        n_dense=N_DENSE, n_sparse=N_SPARSE, modulus=MOD)])
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=2,
+                     tile_pkts=2),
+        chain, _shard_fn(n_pkts),
+        tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, None))
+    batch, _ = ing.fetch_shard_streaming(3)
+    _assert_matches_oracle(batch, 3, n_pkts)
+
+
+def test_streamed_bit_identity_short_final_tile_and_odd_striping():
+    """7 packets over 2 stripes (4+3) with 2-packet tiles: the final
+    tile of each stripe is short; identity must survive the padding."""
+    n_pkts = 7
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=2,
+                     tile_pkts=2),
+        None, _shard_fn(n_pkts),
+        tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, MOD))
+    batch, rep = ing.fetch_shard_streaming(11)
+    _assert_matches_oracle(batch, 11, n_pkts)
+    assert [s.n_pkts for s in rep.stripes] == [4, 3]
+
+
+def test_streamed_bit_identity_under_loss():
+    """Retransmission underneath the watermark: lossy links must only
+    delay tiles, never corrupt or reorder them."""
+    n_pkts = 12
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=2,
+                     tile_pkts=2, loss_prob=0.05),
+        None, _shard_fn(n_pkts),
+        tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, MOD))
+    batch, _ = ing.fetch_shard_streaming(4)
+    _assert_matches_oracle(batch, 4, n_pkts)
+
+
+def test_midstream_replica_death_refetches_only_its_stripes():
+    n_pkts = 16
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=2,
+                     link_bw_pkts_per_tick=1, tile_pkts=2,
+                     stall_ticks=150),
+        None, _shard_fn(n_pkts), decode_fn=_poison,
+        tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, MOD))
+    # tight retry budget: the dead QP exhausts inside the stall window
+    ing.trainer.retx.MAX_RETRIES = 2
+    ing.trainer.retx.timeout = 20
+    dead = ing.storage[0].node
+
+    def kill(t):                      # node 0 dies MID-stream
+        if t == 3:
+            for (src, dst), link in ing.net.links.items():
+                if src == dead.node_id:
+                    link.cfg.loss_prob = 1.0
+
+    # drive via the low-level API so the fault hook can fire, collecting
+    # tiles exactly like fetch_shard_streaming does
+    tiles = {}
+
+    def consume(stripe, tidx, dev, nv):
+        tiles[(stripe.sid, tidx)] = (np.asarray(dev), nv, stripe.pkt_start)
+
+    rep = ing.stream_shard(7, consume, on_tick=kill)
+    # ONLY the dead node's stripe re-fetched, on the surviving replica
+    by_sid = {s.sid: s for s in rep.stripes}
+    assert rep.refetches == 1
+    assert by_sid[0].refetches == 1 and by_sid[0].attempts == (0, 1)
+    assert by_sid[1].refetches == 0 and by_sid[1].attempts == (1,)
+    # payload identical to the shard despite the death
+    out = np.zeros(n_pkts * MTU, np.uint8)
+    for (sid, tidx), (arr, nv, pkt_start) in tiles.items():
+        lo = (pkt_start + tidx * 2) * MTU
+        out[lo:lo + nv * MTU] = arr.reshape(-1)[:nv * MTU]
+    want = np.asarray(_shard_fn(n_pkts)(7))
+    np.testing.assert_array_equal(out[:want.size], want)
+    assert ing.host_payload_bytes == 0
+
+
+def test_transient_outage_then_reuse_no_stale_payload():
+    """A TRANSIENT outage (peer alive, link lossy, then healed): after
+    per-stripe failover, re-using the recovered QP for the next shard
+    must deliver THAT shard's bytes.  A one-sided reestablish would let
+    the peer's stale retransmit ring replay the old transfer with the
+    PSNs a zero-reset trainer expects — silent stale payload.  The
+    two-sided fresh-epoch reestablish makes the replays un-acceptable."""
+    n_pkts = 16
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=2,
+                     link_bw_pkts_per_tick=1, tile_pkts=2,
+                     stall_ticks=150),
+        None, _shard_fn(n_pkts),
+        tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, MOD))
+    ing.trainer.retx.MAX_RETRIES = 2
+    ing.trainer.retx.timeout = 20
+    flaky = ing.storage[0].node
+
+    def outage(t):                    # node 0 mute from tick 3...
+        if t == 3:
+            for (src, dst), link in ing.net.links.items():
+                if src == flaky.node_id:
+                    link.cfg.loss_prob = 1.0
+
+    _, rep0 = _run_stream_with_hook(ing, 0, outage)
+    assert rep0.refetches >= 1
+    # ...link heals; the next shard goes over the SAME (recovered) QPs
+    for link in ing.net.links.values():
+        link.cfg.loss_prob = 0.0
+    batch, rep1 = ing.fetch_shard_streaming(1)
+    assert rep1.refetches == 0
+    _assert_matches_oracle(batch, 1, n_pkts)
+
+
+def _run_stream_with_hook(ing, index, on_tick):
+    """fetch_shard_streaming with a fault-injection hook: same tile
+    collection, driven through the low-level stream_shard API."""
+    tiles = {}
+
+    def consume(stripe, tidx, dev, nv):
+        tiles[(stripe.sid, tidx)] = np.asarray(dev)
+
+    rep = ing.stream_shard(index, consume, on_tick=on_tick)
+    return tiles, rep
+
+
+def test_midstream_failover_refetches_only_unconsumed_suffix():
+    """Tiles consumed before the replica died are NOT re-transferred:
+    the refetch READ resumes at the last emitted tile boundary."""
+    n_pkts = 16
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=2,
+                     link_bw_pkts_per_tick=1, tile_pkts=2,
+                     stall_ticks=150),
+        None, _shard_fn(n_pkts), decode_fn=_poison,
+        tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, MOD))
+    ing.trainer.retx.MAX_RETRIES = 2
+    ing.trainer.retx.timeout = 20
+    dead = ing.storage[0].node
+
+    def kill(t):                      # die after stripe 0 emitted tiles
+        if t == 12:                   # 2 of its 4 tiles are out by now
+            for (src, dst), link in ing.net.links.items():
+                if src == dead.node_id:
+                    link.cfg.loss_prob = 1.0
+                    link._heap.clear()    # node death loses in-flight
+                                          # frames too, not just new ones
+
+    tiles = {}
+
+    def consume(stripe, tidx, dev, nv):
+        tiles[(stripe.sid, tidx)] = (np.asarray(dev), nv, stripe.pkt_start)
+
+    rep = ing.stream_shard(9, consume, on_tick=kill)
+    s0 = {s.sid: s for s in rep.stripes}[0]
+    assert s0.refetches == 1
+    assert s0.resume > 0, "refetch did not resume mid-stripe"
+    assert s0.resume % (2 * MTU) == 0      # tile-aligned
+    # payload still identical
+    out = np.zeros(n_pkts * MTU, np.uint8)
+    for (sid, tidx), (arr, nv, pkt_start) in tiles.items():
+        lo = (pkt_start + tidx * 2) * MTU
+        out[lo:lo + nv * MTU] = arr.reshape(-1)[:nv * MTU]
+    want = np.asarray(_shard_fn(n_pkts)(9))
+    np.testing.assert_array_equal(out[:want.size], want)
+
+
+def test_all_replicas_dead_raises():
+    n_pkts = 4
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=2,
+                     tile_pkts=2, stall_ticks=100),
+        None, _shard_fn(n_pkts),
+        tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, MOD))
+    ing.trainer.retx.MAX_RETRIES = 2
+    ing.trainer.retx.timeout = 20
+    for (src, dst), link in ing.net.links.items():
+        if src != 0:                  # every storage node mute
+            link.cfg.loss_prob = 1.0
+    with pytest.raises(RuntimeError, match="all replicas failed"):
+        ing.fetch_shard_streaming(0)
+
+
+def test_transport_and_kernel_calls_interleave():
+    """The point of streaming: tile hand-offs happen WHILE later bytes
+    are still on the wire, not after the transfer."""
+    n_pkts = 32
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=4,
+                     link_bw_pkts_per_tick=1, tile_pkts=2),
+        None, _shard_fn(n_pkts),
+        tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, MOD))
+    _, rep = ing.fetch_shard_streaming(0)
+    tile_ticks = [e[1] for e in rep.events if e[0] == "tile"]
+    done_ticks = [e[1] for e in rep.events if e[0] == "done"]
+    # tiles were consumed strictly before the transport finished...
+    assert min(tile_ticks) < rep.transport_done_tick
+    assert rep.tiles_overlapped > 0
+    assert rep.overlap_efficiency > 0.5
+    # ...and the interleave is genuine: tile events are spread across
+    # the transfer, with transport completions still to come after the
+    # first tiles were already processed
+    assert min(tile_ticks) < min(done_ticks) <= max(done_ticks)
+    assert rep.goodput_bytes_per_tick > 0
+
+
+def test_multi_qp_per_node_remote_qpn_derivation():
+    """A storage node holding >1 QP: remote QPNs must come from the
+    connection table per QP (the old max(dict-keys) guess collapses
+    every stripe onto the last-created QP)."""
+    n_pkts = 8
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=2,
+                     qps_per_node=2, tile_pkts=2),
+        None, _shard_fn(n_pkts),
+        tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, MOD))
+    # 4 QPs over 2 nodes; each node's two remote QPNs are distinct and
+    # exactly what the trainer's connection table says
+    by_node = {}
+    for qp in ing.qps:
+        assert qp.qpn_r == ing.trainer.remote_qpn(qp.qpn_l)
+        by_node.setdefault(qp.node, set()).add(qp.qpn_r)
+    assert all(len(v) == 2 for v in by_node.values())
+    # and the striped fetch over all 4 QPs still reproduces the oracle
+    batch, rep = ing.fetch_shard_streaming(2)
+    _assert_matches_oracle(batch, 2, n_pkts)
+    assert len(rep.stripes) == 4
+
+
+def test_per_stripe_credit_ledger_exposed():
+    n_pkts = 12
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=2,
+                     tile_pkts=2),
+        None, _shard_fn(n_pkts),
+        tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, MOD))
+    _, rep = ing.fetch_shard_streaming(1)
+    ledgers = rep.ledgers
+    assert set(ledgers) == {s.sid for s in rep.stripes}
+    for s in rep.stripes:
+        led = ledgers[s.sid]
+        # every packet of the stripe consumed (and returned) one credit
+        assert led.accepted == s.n_pkts
+        assert led.dropped == 0
+        assert 0 <= led.credits <= led.max_credits
+    # per-QP ledgers reconcile with the aggregate counters
+    agg = sum(ing.trainer.credits.accepted_per_qp)
+    assert agg == ing.trainer.credits.accepted
+
+
+def test_legacy_sync_path_counts_host_copies():
+    """The store-and-forward baseline still works — and its host decode
+    copy is exactly what the counter (and the streaming plane) tracks."""
+    n_pkts = 4
+    raw_bytes = n_pkts * MTU
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=raw_bytes, n_storage_nodes=2),
+        None, _shard_fn(n_pkts),
+        decode_fn=lambda raw: {"raw": np.frombuffer(raw.tobytes(),
+                                                    np.uint8)})
+    got = ing.fetch_shard(6)
+    np.testing.assert_array_equal(np.asarray(got["raw"]),
+                                  _shard_fn(n_pkts)(6))
+    assert ing.host_payload_bytes == raw_bytes

@@ -154,6 +154,27 @@ def test_fused_chain_decrypt_roundtrip():
     np.testing.assert_array_equal(np.asarray(p_f), plain)
 
 
+def test_fused_chain_tile_entry_matches_oneshot():
+    """Streaming tile entry: short tiles padded to the fixed shape must
+    return rows bit-identical to the one-shot call over the same rows."""
+    from repro.kernels.fused_chain import (fused_decrypt_dpi_pallas,
+                                           fused_decrypt_dpi_tile)
+    rng = np.random.default_rng(11)
+    pay = rng.integers(0, 256, (13, 256), dtype=np.uint8)
+    rk = expand_key(rng.integers(0, 256, 16, dtype=np.uint8))
+    params = ternarize(init_dpi_params(jax.random.key(5)))
+    p_all, s_all = fused_decrypt_dpi_pallas(jnp.asarray(pay), rk, params)
+    for lo, hi in ((0, 8), (8, 13)):        # full tile + short final tile
+        p_t, s_t = fused_decrypt_dpi_tile(jnp.asarray(pay[lo:hi]), rk,
+                                          params, tile_pkts=8)
+        np.testing.assert_array_equal(np.asarray(p_t),
+                                      np.asarray(p_all)[lo:hi])
+        np.testing.assert_array_equal(np.asarray(s_t),
+                                      np.asarray(s_all)[lo:hi])
+    with pytest.raises(ValueError, match="tile carries"):
+        fused_decrypt_dpi_tile(jnp.asarray(pay), rk, params, tile_pkts=8)
+
+
 # ---------------------------------------------------------------------------
 # DLRM preprocessing
 # ---------------------------------------------------------------------------
@@ -171,6 +192,22 @@ def test_preproc_pallas_matches_ref(m, n_dense, n_sparse, modulus, seed):
     r = np.asarray(ops.preproc(jnp.asarray(recs), n_dense, modulus,
                                impl="ref"))
     np.testing.assert_array_equal(p, r)
+
+
+def test_preproc_tile_entry_matches_oneshot():
+    """Streamed tiles (including a short final tile) reproduce the
+    one-shot kernel bit for bit — the ingest's bit-identity contract at
+    the kernel layer."""
+    from repro.kernels.preproc import preproc_tile
+    rng = np.random.default_rng(7)
+    recs = rng.integers(-10**6, 2**30, (77, 39)).astype(np.int32)
+    want = np.asarray(ops.preproc(jnp.asarray(recs), 13, 1000))
+    got = [np.asarray(ops.preproc_tile(jnp.asarray(recs[lo:lo + 32]),
+                                       13, 1000, tile_recs=32))
+           for lo in range(0, 77, 32)]
+    np.testing.assert_array_equal(np.concatenate(got), want)
+    with pytest.raises(ValueError, match="tile carries"):
+        preproc_tile(jnp.asarray(recs), 13, 1000, tile_recs=32)
 
 
 def test_preproc_semantics():
