@@ -1,7 +1,7 @@
 """Paper Fig. 6 analogue: multi-QP scaling, fairness, incast, and the
 ECN/DCQCN congestion-control comparison.
 
-Four experiments:
+Five experiments:
 
 1. **Scaling sweep** (PR 1's acceptance metric): aggregate RX-pipeline
    throughput (packets/sec) vs. QP count, 1 -> 512, for the per-packet
@@ -25,8 +25,15 @@ Four experiments:
    Asserts that at 8:1 DCQCN gives strictly fewer drop-tail drops and
    >= 1.3x goodput.
 
-``--smoke`` runs a tiny CC sweep only (the CI bench job); ``--json P``
-writes all results to ``P`` for the bench trajectory.
+5. **Multipath sweep** (PR 6's acceptance metric): the same incast
+   over a 2-spine leaf-spine ``ClosFabric`` with per-packet spray and
+   asymmetric spine delays, go-back-N vs selective-repeat RX, plus a
+   single-path (ECMP) arm and a mid-transfer spine-failure arm.
+   Asserts SR >= 1.3x GBN goodput with strictly fewer retransmitted
+   packets — reorder alone must not trigger the loss path.
+
+``--smoke`` runs tiny CC + multipath sweeps only (the CI bench job);
+``--json P`` writes all results to ``P`` for the bench trajectory.
 """
 from __future__ import annotations
 
@@ -40,7 +47,8 @@ from benchmarks._util import emit, time_fn
 from repro.core import packet as pk
 from repro.core import pipeline as pipe
 from repro.core.netsim import (FabricConfig, LinkConfig, Network,
-                               dcqcn_fabric_profile, incast_scenario)
+                               clos_incast_scenario, dcqcn_fabric_profile,
+                               incast_scenario)
 from repro.core.rdma import RdmaNode, run_network
 
 SWEEP_QPS = (1, 4, 16, 64, 256, 512)
@@ -181,6 +189,82 @@ def incast_cc_sweep(fan_ins=(2, 4, 8, 16), message_bytes: int = 1 << 20,
     return results
 
 
+def _multipath_arm(n_senders: int, message_bytes: int, rx_mode: str,
+                   path_select: str, fail_spine_at=None) -> dict:
+    res = clos_incast_scenario(n_senders, message_bytes=message_bytes,
+                               rx_mode=rx_mode, path_select=path_select,
+                               fail_spine_at=fail_spine_at)
+    fab = res.fabric
+    for i, data in enumerate(res.payloads):
+        want = res.senders[i].expected_completions(len(data))
+        got = res.receiver.check_completed(i + 1)
+        assert got == want, (
+            f"clos incast ({rx_mode}/{path_select}) lost data: sender "
+            f"{i} completed {got}/{want} messages")
+    goodput = n_senders * message_bytes / max(res.ticks, 1)
+    return {
+        "rx_mode": rx_mode, "path_select": path_select,
+        "fan_in": n_senders, "message_bytes": message_bytes,
+        "fail_spine_at": fail_spine_at, "ticks": res.ticks,
+        "goodput_B_per_tick": round(goodput, 2),
+        "spine_pkts": list(fab.spine_pkts),
+        "tail_dropped": fab.total_tail_dropped,
+        "retransmissions": sum(s.stats.retransmissions
+                               for s in res.senders),
+        "ooo_naks": sum(s.stats.ooo_nak for s in res.senders)
+                    + res.receiver.stats.ooo_nak,
+        "sacked": sum(s.stats.sacked for s in res.senders),
+        "alive_spines": len(fab.alive_paths),
+        "failure_dropped": fab.failure_dropped,
+    }
+
+
+def multipath_sweep(fan_ins=(2, 4), message_bytes: int = 65536,
+                    check: bool = True) -> list:
+    """Spray vs single-path over the Clos fabric, GBN vs SR (PR 6).
+
+    The asymmetric spine delays make per-packet spray genuinely
+    reorder every flow; go-back-N misreads the reorder as loss and
+    re-sends whole windows while selective repeat absorbs it, so SR
+    must win on both goodput and retransmission count.
+    """
+    results = []
+    for n in fan_ins:
+        gbn = _multipath_arm(n, message_bytes, "go_back_n", "spray")
+        sr = _multipath_arm(n, message_bytes, "selective_repeat", "spray")
+        one = _multipath_arm(n, message_bytes, "selective_repeat", "ecmp")
+        results += [gbn, sr, one]
+        gain = sr["goodput_B_per_tick"] / max(gbn["goodput_B_per_tick"],
+                                              1e-9)
+        emit(f"fig6_multipath_{n}to1", 0.0,
+             f"gbn_retx={gbn['retransmissions']};"
+             f"sr_retx={sr['retransmissions']};"
+             f"sr_goodput_gain={gain:.2f}x;"
+             f"spray_spines={sr['spine_pkts']};"
+             f"ecmp_spines={one['spine_pkts']}")
+        if check:
+            assert all(p > 0 for p in sr["spine_pkts"]), \
+                f"{n}:1 spray left a spine idle: {sr['spine_pkts']}"
+            assert gain >= 1.3, (
+                f"{n}:1 spray incast: SR goodput only {gain:.2f}x of "
+                f"go-back-N (acceptance floor: 1.3x)")
+            assert sr["retransmissions"] < gbn["retransmissions"], (
+                f"{n}:1 spray incast: SR retransmitted "
+                f"{sr['retransmissions']} >= GBN "
+                f"{gbn['retransmissions']}")
+    fail = _multipath_arm(max(fan_ins), message_bytes,
+                          "selective_repeat", "spray", fail_spine_at=10)
+    results.append(fail)
+    emit("fig6_multipath_spine_failure", 0.0,
+         f"ticks={fail['ticks']};retx={fail['retransmissions']};"
+         f"dropped_in_flight={fail['failure_dropped']};"
+         f"spine_pkts={fail['spine_pkts']}")
+    if check:
+        assert fail["alive_spines"] < len(fail["spine_pkts"]), \
+            "spine failure arm never actually killed a spine"
+    return results
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
@@ -198,6 +282,10 @@ def main(argv=None):
         by = {(r["fan_in"], r["cc"]): r for r in results["incast_cc"]}
         assert by[(8, "dcqcn")]["tail_dropped"] <= \
             by[(8, "ack_clocked")]["tail_dropped"], "smoke: DCQCN regressed"
+        # PR 6's headline must hold even at smoke scale: SR >= 1.3x GBN
+        # goodput under spray with fewer retransmissions (checked inside)
+        results["multipath"] = multipath_sweep(
+            fan_ins=(3,), message_bytes=32768)
     else:
         results["sweep_speedup"] = {str(k): round(v, 2)
                                     for k, v in sweep().items()}
@@ -211,6 +299,7 @@ def main(argv=None):
         results["fairness_cv"] = fair
         incast()
         results["incast_cc"] = incast_cc_sweep()
+        results["multipath"] = multipath_sweep()
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)

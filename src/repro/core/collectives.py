@@ -417,21 +417,33 @@ def make_ring_group(world: int, max_bytes: int, *,
                     congestion_control: str = "ack_clocked",
                     engine: str = "batched", fc_window: int = 16,
                     impl: Optional[str] = None,
-                    max_ticks: int = 300_000):
-    """Convenience constructor: ``world`` nodes on a fresh
-    ``SwitchedFabric`` (ports = ranks), mesh-connected into a
-    ``CollectiveGroup``.  Returns the group (nodes at ``group.nodes``).
+                    max_ticks: int = 300_000,
+                    rx_mode: str = "go_back_n",
+                    path_select: Optional[str] = None):
+    """Convenience constructor: ``world`` nodes on a fresh fabric
+    (ports = ranks), mesh-connected into a ``CollectiveGroup``.
+    Returns the group (nodes at ``group.nodes``).
+
+    ``fabric_cfg`` may be a ``FabricConfig`` (single-switch star, the
+    default) or a ``ClosConfig`` (leaf-spine multipath — pair it with
+    ``rx_mode="selective_repeat"`` / ``path_select="spray"`` so the
+    collective's neighbor exchanges tolerate the fabric's reorder).
     """
     from repro.core.flow_control import DcqcnConfig
-    from repro.core.netsim import FabricConfig, SwitchedFabric, _per_port
+    from repro.core.netsim import (ClosConfig, ClosFabric, FabricConfig,
+                                   SwitchedFabric, _per_port)
 
     cfg = fabric_cfg if fabric_cfg is not None else FabricConfig(
         port_bandwidth=4, port_delay=2, queue_capacity=48, seed=7)
-    fabric = SwitchedFabric(world, cfg)
+    if isinstance(cfg, ClosConfig):
+        fabric = ClosFabric(world, cfg)
+    else:
+        fabric = SwitchedFabric(world, cfg)
     line = float(_per_port(cfg.port_bandwidth, world)[0])
     dcqcn = DcqcnConfig(line_rate=line, initial_rate=line / 4)
     nodes = [RdmaNode(i, fabric, fc_window=fc_window, engine=engine,
-                      congestion_control=congestion_control, dcqcn=dcqcn)
+                      congestion_control=congestion_control, dcqcn=dcqcn,
+                      rx_mode=rx_mode, path_select=path_select)
              for i in range(world)]
     return CollectiveGroup(nodes, max_bytes, dtype=dtype, offload=offload,
                            impl=impl, max_ticks=max_ticks)

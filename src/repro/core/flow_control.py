@@ -109,23 +109,80 @@ class DcqcnRateController:
         self._last_inc = [0] * n_qps         # last rate-increase tick
         self._last_tick_now = -1
         self._active: set = set()
+        # multipath (per-spine) extension: populated by enable_multipath
+        self.n_paths = 1
+        self.path_rate: Optional[List[List[float]]] = None   # [qpn][path]
+        self.path_target: Optional[List[List[float]]] = None
+        self.path_alpha: Optional[List[List[float]]] = None
+        self.path_stage: Optional[List[List[int]]] = None
+        self.path_tokens: Optional[List[List[float]]] = None
+        self._path_last_cut: Optional[List[List[int]]] = None
+        self._path_last_inc: Optional[List[List[int]]] = None
         # telemetry
         self.cnps_handled = 0
         self.rate_cuts = 0
         self.rate_increases = 0
+        self.path_rate_cuts = 0
+
+    def enable_multipath(self, n_paths: int):
+        """Split each QP's reaction point into ``n_paths`` independent
+        DCQCN instances — one per spine plane of a Clos fabric.  A CNP
+        carrying a ``path_id`` then cuts only that plane's rate; the
+        QP's aggregate rate (what the flow-control drain paces against)
+        is the sum of its per-path rates.  The per-path line rate /
+        floor / AI step are the QP-level parameters divided evenly, so
+        the aggregate dynamics stay inside the single-path envelope."""
+        if n_paths <= 1:
+            return
+        self.n_paths = n_paths
+        r0 = [[r / n_paths] * n_paths for r in self.rate]
+        self.path_rate = [row[:] for row in r0]
+        self.path_target = [row[:] for row in r0]
+        self.path_alpha = [[1.0] * n_paths for _ in range(self.n_qps)]
+        self.path_stage = [[0] * n_paths for _ in range(self.n_qps)]
+        self.path_tokens = [[0.0] * n_paths for _ in range(self.n_qps)]
+        self._path_last_cut = [[0] * n_paths for _ in range(self.n_qps)]
+        self._path_last_inc = [[0] * n_paths for _ in range(self.n_qps)]
+
+    @property
+    def multipath(self) -> bool:
+        return self.path_rate is not None
 
     def activate(self, qpn: int, now: int = 0):
         if qpn not in self._active:
             self._active.add(qpn)
             self._last_cut[qpn] = now
             self._last_inc[qpn] = now
+            if self.multipath:
+                self._path_last_cut[qpn] = [now] * self.n_paths
+                self._path_last_inc[qpn] = [now] * self.n_paths
 
-    def on_cnp(self, qpn: int, now: int):
+    def on_cnp(self, qpn: int, now: int, path: int = -1):
         """Multiplicative decrease at the reaction point.  Called from
         the CNP control path — never from the ACK path, so a CNP cannot
-        release ACK-clocked budget (CNPs don't ACK data)."""
+        release ACK-clocked budget (CNPs don't ACK data).
+
+        With multipath enabled and a valid ``path`` (the spine the
+        CE-marked packet crossed, echoed in the CNP), only that path's
+        rate is cut; the others keep sending — the congestion is *on
+        that plane*, not on the flow."""
         self.activate(qpn, now)
         c = self.cfg
+        if self.multipath and 0 <= path < self.n_paths:
+            pr, pt = self.path_rate[qpn], self.path_target[qpn]
+            pa = self.path_alpha[qpn]
+            floor = c.min_rate / self.n_paths
+            pt[path] = pr[path]
+            pr[path] = max(floor, pr[path] * (1.0 - pa[path] / 2.0))
+            pa[path] = min(1.0, (1.0 - c.g) * pa[path] + c.g)
+            self.path_stage[qpn][path] = 0
+            self._path_last_cut[qpn][path] = now
+            self._path_last_inc[qpn][path] = now
+            self.rate[qpn] = max(c.min_rate, sum(pr))
+            self.cnps_handled += 1
+            self.rate_cuts += 1
+            self.path_rate_cuts += 1
+            return
         self.target[qpn] = self.rate[qpn]
         self.rate[qpn] = max(c.min_rate,
                              self.rate[qpn] * (1.0 - self.alpha[qpn] / 2.0))
@@ -145,6 +202,9 @@ class DcqcnRateController:
         self._last_tick_now = now
         c = self.cfg
         for qpn in sorted(self._active):
+            if self.multipath:
+                self._tick_multipath(qpn, now)
+                continue
             if now - self._last_cut[qpn] >= c.alpha_timer:
                 self.alpha[qpn] = (1.0 - c.g) * self.alpha[qpn]
                 self._last_cut[qpn] = now
@@ -159,6 +219,46 @@ class DcqcnRateController:
                 self.rate_increases += 1
             self.tokens[qpn] = min(self.burst,
                                    self.tokens[qpn] + self.rate[qpn])
+
+    def _tick_multipath(self, qpn: int, now: int):
+        """Per-path timers (same RP state machine, per-path constants =
+        QP constants / n_paths), then aggregate: the QP-level rate and
+        token bucket the drain consults are the sums over paths."""
+        c = self.cfg
+        n = self.n_paths
+        line, ai = c.line_rate / n, c.rate_ai / n
+        pburst = self.burst / n
+        pr, pt = self.path_rate[qpn], self.path_target[qpn]
+        pa, ps = self.path_alpha[qpn], self.path_stage[qpn]
+        ptok = self.path_tokens[qpn]
+        for path in range(n):
+            if now - self._path_last_cut[qpn][path] >= c.alpha_timer:
+                pa[path] = (1.0 - c.g) * pa[path]
+                self._path_last_cut[qpn][path] = now
+            if now - self._path_last_inc[qpn][path] >= c.rate_timer:
+                self._path_last_inc[qpn][path] = now
+                if ps[path] >= c.fast_recovery:
+                    pt[path] = min(line, pt[path] + ai)
+                pr[path] = min(line, (pr[path] + pt[path]) / 2)
+                ps[path] += 1
+                self.rate_increases += 1
+            ptok[path] = min(pburst, ptok[path] + pr[path])
+        self.rate[qpn] = max(c.min_rate, sum(pr))
+        self.tokens[qpn] = min(self.burst, sum(ptok))
+
+    def pick_path(self, qpn: int, paths: Tuple[int, ...]) -> int:
+        """Congestion-aware spray: send the next packet down the live
+        path with the most accumulated per-path tokens (ties -> lowest
+        index), charging it one packet.  A path whose rate DCQCN cut
+        accrues tokens slower, so the spray naturally shifts load off
+        the congested spine.  Deficits are allowed (the QP-level bucket
+        has already admitted the burst)."""
+        if not self.multipath:
+            return paths[0]
+        ptok = self.path_tokens[qpn]
+        best = max(paths, key=lambda p: (ptok[p], -p))
+        ptok[best] -= 1.0
+        return best
 
     def take(self, qpn: int, n_pkts: int) -> bool:
         """Spend ``n_pkts`` tokens if available (the pacing gate)."""
@@ -206,11 +306,13 @@ class AckClockedFlowControl:
                                self.budget[qpn] + n_pkts)
         return self._drain(qpn)
 
-    def on_cnp(self, qpn: int, now: int):
+    def on_cnp(self, qpn: int, now: int, path: int = -1):
         """Congestion notification: cut the QP's rate.  Deliberately does
-        NOT touch budget/outstanding — a CNP never ACKs data."""
+        NOT touch budget/outstanding — a CNP never ACKs data.  ``path``
+        (if >= 0 and multipath is enabled) attributes the cut to one
+        spine plane only."""
         if self.rate is not None:
-            self.rate.on_cnp(qpn, now)
+            self.rate.on_cnp(qpn, now, path=path)
 
     def tick_rate(self, now: int):
         """Advance the rate controller (timers + token accrual) without

@@ -71,6 +71,13 @@ class IngestConfig:
     stall_ticks: Optional[int] = None  # per-stripe no-progress failover
                                        # window (None = straggler timeout)
     engine: str = "batched"           # RX engine of every node
+    # --- topology / multipath ---------------------------------------
+    topology: str = "p2p"             # | "clos" (leaf-spine multipath)
+    clos_cfg: Optional[object] = None  # netsim.ClosConfig when "clos"
+    rx_mode: str = "go_back_n"        # | "selective_repeat"
+    path_select: Optional[str] = None  # | "ecmp" | "spray"
+    fc_window: Optional[int] = None   # None = 64 (16 under SR: the
+                                      # burst bound must fit the bitmap)
 
 
 @dataclasses.dataclass
@@ -250,11 +257,27 @@ class BalboaIngest:
                  tile_to_batch: Optional[Callable] = None):
         self.cfg = cfg
         n_nodes = 1 + cfg.n_storage_nodes
-        self.net = Network(n_nodes, LinkConfig(
-            loss_prob=cfg.loss_prob, latency_ticks=cfg.latency_ticks,
-            bandwidth_pkts_per_tick=cfg.link_bw_pkts_per_tick, seed=3))
+        if cfg.topology == "clos":
+            from repro.core.netsim import ClosConfig, ClosFabric
+            ccfg = cfg.clos_cfg if cfg.clos_cfg is not None else ClosConfig(
+                nodes_per_leaf=1, n_spines=2, port_delay=1,
+                spine_delay=(1, 5), loss_prob=cfg.loss_prob, seed=3,
+                path_mode=cfg.path_select or "ecmp")
+            self.net = ClosFabric(n_nodes, ccfg)
+        elif cfg.topology == "p2p":
+            self.net = Network(n_nodes, LinkConfig(
+                loss_prob=cfg.loss_prob, latency_ticks=cfg.latency_ticks,
+                bandwidth_pkts_per_tick=cfg.link_bw_pkts_per_tick, seed=3))
+        else:
+            raise ValueError(f"unknown topology {cfg.topology!r}; "
+                             f"choose from ('p2p', 'clos')")
+        fc_window = cfg.fc_window if cfg.fc_window is not None else (
+            16 if cfg.rx_mode == "selective_repeat" else 64)
+        self._node_kw = dict(engine=cfg.engine, rx_mode=cfg.rx_mode,
+                             path_select=cfg.path_select,
+                             fc_window=fc_window)
         self.trainer = RdmaNode(0, self.net, services=services,
-                                engine=cfg.engine)
+                                **self._node_kw)
         mtu = self.trainer.mtu
         tile_bytes = cfg.tile_pkts * mtu
         # QP buffers hold a full shard (legacy plane) rounded up to whole
@@ -264,7 +287,7 @@ class BalboaIngest:
         self.qps: List[QpRef] = []
         self._node_qps: List[List[int]] = []   # node -> indices into qps
         for i in range(cfg.n_storage_nodes):
-            node = RdmaNode(1 + i, self.net, engine=cfg.engine)
+            node = RdmaNode(1 + i, self.net, **self._node_kw)
             self.storage.append(DisaggregatedStorage(node, shard_fn))
             mine = []
             for _ in range(cfg.qps_per_node):

@@ -10,7 +10,7 @@ bit-identically (which is what lets tests assert exactly-once in-order
 delivery and lets the batched engine be diffed against the scan oracle
 on the very same trace).
 
-Two topologies:
+Three topologies:
 
 ``Network``        — nodes connected pairwise by two directed ``Link``s
                      (loss, reorder, latency, jitter, bandwidth shaping).
@@ -29,9 +29,19 @@ Two topologies:
                      CE-marked (RED-style, at dequeue) instead of only
                      tail-dropped, feeding the CNP/rate-control loop in
                      ``flow_control`` / ``rdma``.
+``ClosFabric``     — a two-tier leaf-spine (Clos) fabric: nodes hang
+                     off leaf switches, leaves interconnect through
+                     ``n_spines`` parallel spine planes.  Cross-leaf
+                     packets pick a spine per flow (ECMP hash) or per
+                     packet (spray), so the fabric genuinely delivers
+                     out of order when spine delays are asymmetric —
+                     the arrival pattern selective-repeat RX exists
+                     for.  Every stage reuses the same drop-tail /
+                     RED-marking egress machinery as the single
+                     switch, and a spine can be failed mid-run.
 
-Both expose the same surface (``send`` / ``tick`` / ``quiescent`` /
-``now``) so ``RdmaNode`` and ``run_network`` work with either.
+All expose the same surface (``send`` / ``tick`` / ``quiescent`` /
+``now``) so ``RdmaNode`` and ``run_network`` work with any of them.
 
 The switched fabric can additionally host a ``SwitchReducer`` (the
 in-fabric reduction offload of ``repro.core.collectives``): CHUNK-
@@ -371,6 +381,72 @@ class PortStats:
     max_depth: int = 0           # high-water mark of the egress queue
 
 
+def _red_mark(rng: np.random.Generator, depth: int,
+              kmin: int, kmax: int, pmax: float) -> bool:
+    """RED-style CE-marking decision for a dequeue leaving ``depth``
+    packets behind it (including itself).  Only draws randomness inside
+    the [kmin, kmax) ramp, so configurations without ECN replay the
+    exact same rng stream as before.  Shared by every egress stage of
+    both switched topologies."""
+    if kmax <= 0:
+        return False
+    if depth >= kmax:
+        return True
+    if depth <= kmin:
+        return False
+    prob = pmax * (depth - kmin) / max(kmax - kmin, 1)
+    return bool(rng.random() < prob)
+
+
+class _EgressQueue:
+    """One drop-tail egress queue drained at a fixed bandwidth — the
+    per-port machinery of ``SwitchedFabric``, factored out so the Clos
+    fabric's leaf uplinks / spine downlinks / node ports are all the
+    same stage.  Items are ``(packet, meta)`` pairs (``meta`` carries
+    the final destination through multi-hop stages)."""
+
+    def __init__(self, capacity: int, bandwidth: int, stats: PortStats):
+        self.capacity = capacity
+        self.bandwidth = bandwidth
+        self.stats = stats
+        self._q: Deque[Tuple[pk.Packet, object]] = collections.deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def enqueue(self, p: pk.Packet, meta=None) -> bool:
+        """Drop-tail admission."""
+        if len(self._q) >= self.capacity:
+            self.stats.tail_dropped += 1
+            return False
+        self._q.append((p, meta))
+        self.stats.enqueued += 1
+        self.stats.max_depth = max(self.stats.max_depth, len(self._q))
+        return True
+
+    def drain(self, mark) -> List[Tuple[pk.Packet, object]]:
+        """Pop up to ``bandwidth`` items; ``mark(depth)`` decides the CE
+        bit per departure (marking at DEQUEUE: the mark reflects the
+        depth the packet leaves behind and reaches the receiver after
+        only the remaining wire delay — the tight feedback loop DCQCN's
+        stability relies on)."""
+        batch: List[Tuple[pk.Packet, object]] = []
+        for _ in range(min(self.bandwidth, len(self._q))):
+            if mark(len(self._q)):
+                self._q[0][0].ecn = True
+                self.stats.ecn_marked += 1
+            batch.append(self._q.popleft())
+        self.stats.delivered += len(batch)
+        return batch
+
+    def flush(self) -> int:
+        """Discard everything queued (link/spine failure); returns the
+        number of packets lost."""
+        n = len(self._q)
+        self._q.clear()
+        return n
+
+
 class SwitchedFabric:
     """A single switch; node ``i`` hangs off port ``i``.
 
@@ -394,9 +470,10 @@ class SwitchedFabric:
         self._seq = 0
         # packets on the ingress wire: (arrival_tick, seq, dst, packet)
         self._wire: List[Tuple[int, int, int, pk.Packet]] = []
-        self.egress: List[Deque[pk.Packet]] = [
-            collections.deque() for _ in range(n_nodes)]
         self.port_stats = [PortStats() for _ in range(n_nodes)]
+        self.egress: List[_EgressQueue] = [
+            _EgressQueue(cfg.queue_capacity, self.bandwidth[i],
+                         self.port_stats[i]) for i in range(n_nodes)]
         self.reducer: Optional[SwitchReducer] = None
 
     def attach_reducer(self, reducer: SwitchReducer):
@@ -438,53 +515,22 @@ class SwitchedFabric:
             self._enqueue(dst, p)
         out: Dict[Tuple[int, int], List[pk.Packet]] = {}
         for dst in range(self.n_nodes):
-            q = self.egress[dst]
-            if not q:
+            if not len(self.egress[dst]):
                 continue
-            st = self.port_stats[dst]
-            batch = []
-            for _ in range(min(self.bandwidth[dst], len(q))):
-                # mark at DEQUEUE: the CE bit reflects the depth the
-                # packet leaves behind and reaches the receiver after
-                # only the wire delay, not after its own queue sojourn —
-                # the tight feedback loop DCQCN's stability relies on
-                if self._ecn_mark(len(q)):
-                    q[0].ecn = True
-                    st.ecn_marked += 1
-                batch.append(q.popleft())
-            st.delivered += len(batch)
+            batch = [p for p, _ in self.egress[dst].drain(self._ecn_mark)]
             out[(-1, dst)] = batch
         return out
 
     def _enqueue(self, dst: int, p: pk.Packet):
         """Drop-tail admission into a port's egress queue."""
-        q = self.egress[dst]
-        st = self.port_stats[dst]
-        if len(q) >= self.cfg.queue_capacity:
-            st.tail_dropped += 1
-            return
-        q.append(p)
-        st.enqueued += 1
-        st.max_depth = max(st.max_depth, len(q))
+        self.egress[dst].enqueue(p)
 
     def _ecn_mark(self, depth: int) -> bool:
-        """RED-style marking decision for a dequeue leaving ``depth``
-        packets behind it (including itself).  Only draws randomness
-        inside the [kmin, kmax) ramp, so configurations without ECN
-        replay the exact same rng stream as before."""
-        kmax = self.cfg.ecn_kmax
-        if kmax <= 0:
-            return False
-        if depth >= kmax:
-            return True
-        kmin = self.cfg.ecn_kmin
-        if depth <= kmin:
-            return False
-        prob = self.cfg.ecn_pmax * (depth - kmin) / max(kmax - kmin, 1)
-        return bool(self.rng.random() < prob)
+        return _red_mark(self.rng, depth, self.cfg.ecn_kmin,
+                         self.cfg.ecn_kmax, self.cfg.ecn_pmax)
 
     def quiescent(self) -> bool:
-        return (not self._wire and all(not q for q in self.egress)
+        return (not self._wire and all(not len(q) for q in self.egress)
                 and (self.reducer is None or self.reducer.in_flight == 0))
 
     # ---- telemetry ----------------------------------------------------
@@ -510,6 +556,260 @@ def dcqcn_fabric_profile() -> FabricConfig:
     exact profile."""
     return FabricConfig(port_bandwidth=4, port_delay=2, queue_capacity=48,
                         ecn_kmin=8, ecn_kmax=24, ecn_pmax=0.05, seed=7)
+
+
+# ---------------------------------------------------------------------------
+# Leaf-spine (Clos) multipath fabric
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClosConfig:
+    """Two-tier leaf-spine fabric.  ``port_bandwidth`` / ``port_delay``
+    accept a scalar or a per-node sequence; ``spine_delay`` a scalar or
+    per-spine sequence (asymmetric spine delays are what make per-packet
+    spraying genuinely reorder).  ECN marking (same RED ramp as
+    ``FabricConfig``) applies at every egress stage — node ports, leaf
+    uplinks and spine downlinks — so a congested spine plane CE-marks
+    the packets that crossed it, and the receiver's CNPs can carry the
+    path back to a per-path DCQCN reaction point.
+
+    ``path_mode`` is the *fabric-side* route choice for packets the
+    sender did not stamp (``Packet.path_id < 0``) or whose stamped
+    spine has failed: ``"ecmp"`` hashes (src, dst, qpn) so one flow
+    stays on one spine; ``"spray"`` round-robins per source across the
+    live spines.  Sender-stamped live paths are always honored."""
+    nodes_per_leaf: int = 1
+    n_spines: int = 2
+    port_bandwidth: Union[int, Sequence[int]] = 4   # node egress pkts/tick
+    port_delay: Union[int, Sequence[int]] = 2       # node ingress wire
+    queue_capacity: int = 64                        # node-port egress depth
+    uplink_bandwidth: int = 4                       # leaf->spine drain rate
+    uplink_capacity: int = 64
+    downlink_bandwidth: int = 4                     # spine->leaf drain rate
+    downlink_capacity: int = 64
+    spine_delay: Union[int, Sequence[int]] = 2      # per-spine wire latency
+    loss_prob: float = 0.0                          # random ingress-wire loss
+    ecn_kmin: int = 0
+    ecn_kmax: int = 0                               # 0 = marking off
+    ecn_pmax: float = 1.0
+    path_mode: str = "ecmp"                         # | "spray"
+    seed: int = 0
+
+
+class ClosFabric:
+    """A two-tier Clos: node ``i`` hangs off leaf ``i // nodes_per_leaf``;
+    every leaf connects to every spine.  Same surface as
+    ``SwitchedFabric`` (``send`` / ``tick`` / ``quiescent`` / ``now``).
+
+    Datapath per cross-leaf packet:
+        ingress wire (``port_delay[src]``, seeded random loss)
+        -> leaf uplink queue toward the chosen spine (drop-tail + RED)
+        -> spine wire (``spine_delay[s]``)
+        -> spine downlink queue toward the destination leaf
+        -> spine wire (``spine_delay[s]``) back down
+        -> destination node's port queue -> drained at port bandwidth.
+    Same-leaf packets skip the spine stages entirely (one wire + the
+    port queue — exactly the single-switch datapath).
+
+    Spraying across spines with asymmetric ``spine_delay`` makes
+    packets of one flow overtake each other — the reorder regime
+    go-back-N collapses under and selective-repeat RX absorbs.
+    ``fail_spine`` kills a plane mid-run: everything queued on or
+    flying toward it is lost (counted in ``failure_dropped``) and
+    future picks re-route to the surviving spines.
+    """
+
+    # wire-event stage codes (heap entries stay tuple-comparable)
+    _UP, _DOWN, _PORT = 0, 1, 2
+
+    def __init__(self, n_nodes: int, cfg: Optional[ClosConfig] = None):
+        cfg = cfg if cfg is not None else ClosConfig()
+        if cfg.path_mode not in ("ecmp", "spray"):
+            raise ValueError(f"unknown path_mode {cfg.path_mode!r}; "
+                             f"choose from ('ecmp', 'spray')")
+        if cfg.n_spines < 1:
+            raise ValueError("ClosFabric needs at least one spine")
+        self.cfg = cfg
+        self.n_nodes = n_nodes
+        self.nodes_per_leaf = max(1, cfg.nodes_per_leaf)
+        self.n_leaves = -(-n_nodes // self.nodes_per_leaf)
+        self.n_spines = cfg.n_spines
+        self.bandwidth = _per_port(cfg.port_bandwidth, n_nodes)
+        self.delay = _per_port(cfg.port_delay, n_nodes)
+        self.spine_delay = _per_port(cfg.spine_delay, cfg.n_spines)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.now = 0
+        self._seq = 0
+        # wire events: (arrival, seq, stage, leaf, spine, dst, packet)
+        self._wire: List[Tuple[int, int, int, int, int, int, pk.Packet]] = []
+        self.port_stats = [PortStats() for _ in range(n_nodes)]
+        self.down = [_EgressQueue(cfg.queue_capacity, self.bandwidth[i],
+                                  self.port_stats[i])
+                     for i in range(n_nodes)]
+        self.uplink_stats = [[PortStats() for _ in range(self.n_spines)]
+                             for _ in range(self.n_leaves)]
+        self.up = [[_EgressQueue(cfg.uplink_capacity, cfg.uplink_bandwidth,
+                                 self.uplink_stats[lf][s])
+                    for s in range(self.n_spines)]
+                   for lf in range(self.n_leaves)]
+        self.spine_stats = [[PortStats() for _ in range(self.n_leaves)]
+                            for _ in range(self.n_spines)]
+        self.spdown = [[_EgressQueue(cfg.downlink_capacity,
+                                     cfg.downlink_bandwidth,
+                                     self.spine_stats[s][lf])
+                        for lf in range(self.n_leaves)]
+                       for s in range(self.n_spines)]
+        self._alive: List[int] = list(range(self.n_spines))
+        self.failed_spines: List[int] = []
+        self._rr: Dict[int, int] = {}       # per-src spray cursor
+        # telemetry
+        self.spine_pkts = [0] * self.n_spines   # packets forwarded via spine
+        self.failure_dropped = 0                # lost to fail_spine()
+        self.rerouted = 0                       # stamped path dead, re-picked
+
+    # ---- topology helpers ---------------------------------------------
+    def leaf_of(self, node: int) -> int:
+        return node // self.nodes_per_leaf
+
+    @property
+    def n_paths(self) -> int:
+        """Parallel spine planes — what a spraying sender spreads over."""
+        return self.n_spines
+
+    @property
+    def alive_paths(self) -> Tuple[int, ...]:
+        return tuple(self._alive)
+
+    # ---- datapath ------------------------------------------------------
+    def send(self, src: int, dst: int, p: pk.Packet):
+        st = self.port_stats[dst]
+        if self.cfg.loss_prob and self.rng.random() < self.cfg.loss_prob:
+            st.wire_dropped += 1
+            return
+        self._seq += 1
+        if self.leaf_of(src) == self.leaf_of(dst):
+            p.path_id = -1                  # no spine crossed
+            heapq.heappush(self._wire, (self.now + self.delay[src],
+                                        self._seq, self._PORT, 0, 0, dst, p))
+            return
+        s = self._route(src, dst, p)
+        p.path_id = s                       # record the path actually taken
+        heapq.heappush(self._wire, (self.now + self.delay[src], self._seq,
+                                    self._UP, self.leaf_of(src), s, dst, p))
+
+    def _route(self, src: int, dst: int, p: pk.Packet) -> int:
+        alive = self._alive
+        if not alive:
+            raise RuntimeError("ClosFabric: every spine has failed")
+        pid = p.path_id
+        if 0 <= pid < self.n_spines:
+            if pid in alive:
+                return pid                  # honor the sender's stamp
+            self.rerouted += 1              # stamped plane is dead: re-pick
+        if self.cfg.path_mode == "spray":
+            c = self._rr.get(src, 0)
+            self._rr[src] = c + 1
+            return alive[c % len(alive)]
+        # ECMP: stable flow hash over the live spines
+        h = (src * 0x9E3779B1 + dst * 0x85EBCA77
+             + p.qpn * 0xC2B2AE3D) & 0xFFFFFFFF
+        return alive[h % len(alive)]
+
+    def tick(self) -> Dict[Tuple[int, int], List[pk.Packet]]:
+        """Advance one tick: land wire arrivals in their stage queues,
+        then drain every queue in deterministic (index) order.  Returns
+        ``{(-1, dst): packets}`` exactly like ``SwitchedFabric``."""
+        self.now += 1
+        while self._wire and self._wire[0][0] <= self.now:
+            _, _, stage, lf, s, dst, p = heapq.heappop(self._wire)
+            if stage == self._UP:
+                self.up[lf][s].enqueue(p, dst)
+            elif stage == self._DOWN:
+                self.spdown[s][lf].enqueue(p, dst)
+            else:
+                self.down[dst].enqueue(p)
+        # leaf uplinks -> spine wires
+        for lf in range(self.n_leaves):
+            for s in range(self.n_spines):
+                for p, dst in self.up[lf][s].drain(self._ecn_mark):
+                    self.spine_pkts[s] += 1
+                    self._seq += 1
+                    heapq.heappush(
+                        self._wire,
+                        (self.now + self.spine_delay[s], self._seq,
+                         self._DOWN, self.leaf_of(dst), s, dst, p))
+        # spine downlinks -> destination-leaf wires
+        for s in range(self.n_spines):
+            for lf in range(self.n_leaves):
+                for p, dst in self.spdown[s][lf].drain(self._ecn_mark):
+                    self._seq += 1
+                    heapq.heappush(
+                        self._wire,
+                        (self.now + self.spine_delay[s], self._seq,
+                         self._PORT, 0, 0, dst, p))
+        # node ports -> deliver
+        out: Dict[Tuple[int, int], List[pk.Packet]] = {}
+        for dst in range(self.n_nodes):
+            if not len(self.down[dst]):
+                continue
+            out[(-1, dst)] = [p for p, _ in self.down[dst].drain(
+                self._ecn_mark)]
+        return out
+
+    def _ecn_mark(self, depth: int) -> bool:
+        return _red_mark(self.rng, depth, self.cfg.ecn_kmin,
+                         self.cfg.ecn_kmax, self.cfg.ecn_pmax)
+
+    # ---- failure injection --------------------------------------------
+    def fail_spine(self, s: int) -> int:
+        """Kill spine plane ``s``: every packet queued on it or flying
+        toward/from it is lost; future picks route around it.  Returns
+        the number of packets dropped (also accumulated in
+        ``failure_dropped``) — the transport recovers them by
+        retransmission like any other loss."""
+        if s not in self._alive:
+            return 0
+        self._alive.remove(s)
+        self.failed_spines.append(s)
+        dropped = 0
+        for lf in range(self.n_leaves):
+            dropped += self.up[lf][s].flush()
+            dropped += self.spdown[s][lf].flush()
+        keep = [ev for ev in self._wire
+                if not (ev[2] in (self._UP, self._DOWN) and ev[4] == s)]
+        dropped += len(self._wire) - len(keep)
+        heapq.heapify(keep)
+        self._wire = keep
+        self.failure_dropped += dropped
+        return dropped
+
+    def quiescent(self) -> bool:
+        return (not self._wire
+                and all(not len(q) for q in self.down)
+                and all(not len(q) for row in self.up for q in row)
+                and all(not len(q) for row in self.spdown for q in row))
+
+    # ---- telemetry -----------------------------------------------------
+    @property
+    def total_tail_dropped(self) -> int:
+        return (sum(s.tail_dropped for s in self.port_stats)
+                + sum(s.tail_dropped for row in self.uplink_stats
+                      for s in row)
+                + sum(s.tail_dropped for row in self.spine_stats
+                      for s in row))
+
+    @property
+    def total_delivered(self) -> int:
+        return sum(s.delivered for s in self.port_stats)
+
+    @property
+    def total_ecn_marked(self) -> int:
+        return (sum(s.ecn_marked for s in self.port_stats)
+                + sum(s.ecn_marked for row in self.uplink_stats
+                      for s in row)
+                + sum(s.ecn_marked for row in self.spine_stats
+                      for s in row))
 
 
 @dataclasses.dataclass
@@ -566,5 +866,66 @@ def incast_scenario(n_senders: int, *, message_bytes: int = 65536,
     for s, qpn, data in work:
         s.rdma_write(qpn, data)
     ticks = run_network([recv] + senders, max_ticks=max_ticks)
+    return IncastResult(receiver=recv, senders=senders, fabric=fabric,
+                        ticks=ticks, payloads=[d for _, _, d in work])
+
+
+def clos_incast_scenario(n_senders: int, *, message_bytes: int = 65536,
+                         clos_cfg: Optional[ClosConfig] = None,
+                         rx_mode: str = "selective_repeat",
+                         path_select: Optional[str] = "spray",
+                         rx_credits: int = 64, fc_window: int = 16,
+                         max_ticks: int = 300_000,
+                         engine: str = "batched",
+                         congestion_control: str = "ack_clocked",
+                         fail_spine_at: Optional[int] = None,
+                         fail_spine: int = 0) -> IncastResult:
+    """The multipath congestion scenario: ``n_senders`` nodes (one per
+    leaf) RDMA-WRITE simultaneously into node 0 across a leaf-spine
+    fabric with asymmetric spine delays.  With ``path_select="spray"``
+    every flow's packets arrive genuinely out of order — the regime the
+    ``rx_mode`` argument exists to compare (``"go_back_n"`` NAKs and
+    re-sends whole windows; ``"selective_repeat"`` absorbs the reorder
+    and re-sends only real gaps).  ``fail_spine_at`` kills spine
+    ``fail_spine`` at that tick mid-transfer; the transport must
+    recover over the survivors."""
+    from repro.core.flow_control import DcqcnConfig     # cycle-free import
+    from repro.core.rdma import RdmaNode, network_pending, step_network
+
+    cfg = clos_cfg if clos_cfg is not None else ClosConfig(
+        nodes_per_leaf=1, n_spines=2, port_bandwidth=4, port_delay=1,
+        queue_capacity=48, spine_delay=(1, 5), seed=7,
+        path_mode=path_select or "ecmp")
+    fabric = ClosFabric(n_senders + 1, cfg)
+    line = float(_per_port(cfg.port_bandwidth, n_senders + 1)[0])
+    dcqcn = DcqcnConfig(line_rate=line, initial_rate=line / 4)
+    kw = dict(rx_mode=rx_mode, path_select=path_select, engine=engine)
+    recv = RdmaNode(0, fabric, rx_credits=rx_credits,
+                    fc_window=fc_window, **kw)
+    senders = [RdmaNode(i + 1, fabric, fc_window=fc_window,
+                        congestion_control=congestion_control,
+                        dcqcn=dcqcn, **kw)
+               for i in range(n_senders)]
+    rng = np.random.default_rng(13)
+    work = []
+    for s in senders:
+        qpn, _, _ = s.init_rdma(message_bytes, recv)
+        data = rng.integers(0, 256, message_bytes, dtype=np.uint8)
+        work.append((s, qpn, data))
+    for s, qpn, data in work:
+        s.rdma_write(qpn, data)
+    nodes = [recv] + senders
+    ticks, idle = max_ticks, 0
+    for t in range(max_ticks):
+        if fail_spine_at is not None and t == fail_spine_at:
+            fabric.fail_spine(fail_spine)
+        step_network(nodes)
+        if network_pending(nodes):
+            idle = 0
+        else:
+            idle += 1
+            if idle >= 8:
+                ticks = t
+                break
     return IncastResult(receiver=recv, senders=senders, fabric=fabric,
                         ticks=ticks, payloads=[d for _, _, d in work])

@@ -79,6 +79,17 @@ class Packet:
     # AETH-ish (for ACK/NAK): cumulative PSN being acknowledged
     ack_psn: int = 0
     msn: int = 0
+    # Selective-ACK bitmap (selective-repeat RX mode): bit k set means
+    # PSN ``ack_psn + 1 + k`` was received out of order (bit 0 — the
+    # expected PSN itself — is never set: receiving it advances the
+    # cumulative ACK instead).  0 on go-back-N ACKs and on data packets.
+    sack_bits: int = 0
+    # Multipath routing tag: the spine index a leaf-spine fabric carried
+    # (or should carry) this packet over.  Stamped by spraying/ECMP
+    # senders, honored and/or (re)stamped by ``netsim.ClosFabric``,
+    # echoed into CNPs so per-path DCQCN can cut the congested path
+    # only.  -1 = unrouted / single-path fabric.
+    path_id: int = -1
     # payload
     payload: Optional[np.ndarray] = None      # uint8[<=MTU]
     icrc: int = 0
@@ -151,7 +162,7 @@ def batch_from_packets(pkts, mtu: int = MTU) -> Dict[str, np.ndarray]:
 def fragment_message(
     qpn: int, start_psn: int, vaddr: int, rkey: int, data: np.ndarray,
     *, op: str = "write", mtu: int = MTU, src_ip: int = 0, dst_ip: int = 0,
-    coll: Optional[tuple] = None,
+    coll: Optional[tuple] = None, addr_per_pkt: bool = False,
 ):
     """Fragment one RDMA WRITE (or READ RESPONSE) payload into MTU-sized
     packets with FIRST/MIDDLE/LAST/ONLY opcodes, consecutive PSNs and a
@@ -160,7 +171,12 @@ def fragment_message(
     ``coll = (tag, src, nsrc, frag_base)`` stamps every fragment as a
     collective CHUNK contribution (fragment indices continue from
     ``frag_base``, so one chunk split into several flow-control
-    sub-messages still numbers its fragments globally)."""
+    sub-messages still numbers its fragments globally).
+
+    ``addr_per_pkt=True`` makes every fragment self-contained (IRN
+    style, for selective-repeat receivers): each packet carries its own
+    target address / rkey / length, so an out-of-order arrival can DMA
+    without the FIRST fragment's RETH cursor."""
     assert op in ("write", "read_resp")
     data = np.asarray(data, np.uint8)
     n_pkts = max(1, (data.size + mtu - 1) // mtu)
@@ -176,11 +192,17 @@ def fragment_message(
             opc = WRITE_LAST if op == "write" else READ_RESP_LAST
         else:
             opc = WRITE_MIDDLE if op == "write" else READ_RESP_MIDDLE
+        if addr_per_pkt:
+            p_vaddr, p_rkey, p_len = vaddr + i * mtu, rkey, chunk.size
+        else:
+            p_vaddr = vaddr if i == 0 else 0
+            p_rkey = rkey if i == 0 else 0
+            p_len = data.size if i == 0 else 0
         pkts.append(Packet(
             src_ip=src_ip, dst_ip=dst_ip, opcode=opc, qpn=qpn,
             psn=(start_psn + i) & PSN_MASK, ack_req=(i == n_pkts - 1),
-            vaddr=vaddr if i == 0 else 0, rkey=rkey if i == 0 else 0,
-            dma_len=data.size if i == 0 else 0, payload=chunk.copy(),
+            vaddr=p_vaddr, rkey=p_rkey,
+            dma_len=p_len, payload=chunk.copy(),
             coll_tag=tag, coll_src=src, coll_nsrc=nsrc,
             coll_frag=(frag_base + i) if tag else -1))
     return pkts
@@ -193,9 +215,14 @@ def make_read_request(qpn: int, psn: int, vaddr: int, rkey: int,
                   dma_len=length, ack_req=True)
 
 
-def make_ack(qpn: int, ack_psn: int, msn: int = 0, nak: bool = False) -> Packet:
+def make_ack(qpn: int, ack_psn: int, msn: int = 0, nak: bool = False,
+             sack: int = 0) -> Packet:
+    """ACK/NAK with optional selective-ACK bitmap (``sack`` bit k =>
+    PSN ``ack_psn + 1 + k`` held out of order by a selective-repeat
+    receiver)."""
     return Packet(opcode=NAK if nak else ACK, qpn=qpn,
-                  psn=ack_psn & PSN_MASK, ack_psn=ack_psn & PSN_MASK, msn=msn)
+                  psn=ack_psn & PSN_MASK, ack_psn=ack_psn & PSN_MASK,
+                  msn=msn, sack_bits=int(sack))
 
 
 def make_nak_prot(qpn: int, psn: int = 0) -> Packet:
@@ -205,11 +232,15 @@ def make_nak_prot(qpn: int, psn: int = 0) -> Packet:
     return Packet(opcode=NAK_PROT, qpn=qpn, psn=psn & PSN_MASK)
 
 
-def make_cnp(qpn: int, src_ip: int = 0, dst_ip: int = 0) -> Packet:
+def make_cnp(qpn: int, src_ip: int = 0, dst_ip: int = 0,
+             path_id: int = -1) -> Packet:
     """Congestion notification (DCQCN NP -> RP).  Pure control signal:
     carries no PSN/AETH state on purpose — a CNP must never advance
-    cumulative-ACK state at the reaction point."""
-    return Packet(opcode=CNP, qpn=qpn, src_ip=src_ip, dst_ip=dst_ip)
+    cumulative-ACK state at the reaction point.  ``path_id`` echoes the
+    spine the CE-marked packet crossed, so a multipath reaction point
+    can cut the congested path's rate instead of the whole QP's."""
+    return Packet(opcode=CNP, qpn=qpn, src_ip=src_ip, dst_ip=dst_ip,
+                  path_id=path_id)
 
 
 def read_resp_npkts(length: int, mtu: int = MTU) -> int:

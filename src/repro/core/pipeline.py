@@ -50,6 +50,15 @@ import jax.numpy as jnp
 from repro.core import packet as pk
 
 
+# Selective-repeat receive window (packets).  Bounded by the int32
+# bitmap the batched engine packs per-QP state into: bit k of ``rxbit``
+# marks PSN ``epsn + k`` as received-but-not-yet-cumulative, so the
+# window must fit a non-negative int32.  The flow-control window (<= 16
+# in every test/bench profile) must stay below this or in-window
+# arrivals could land beyond the bitmap.
+SR_WINDOW = 24
+
+
 class RxTables(NamedTuple):
     """The jax-side mirror of QPTables fields the RX pipeline mutates."""
     epsn: jax.Array        # (Q,) int32
@@ -58,6 +67,8 @@ class RxTables(NamedTuple):
     cur_vaddr: jax.Array   # (Q,) int64
     credits: jax.Array     # (Q,) int32   downstream capacity (§4.3)
     rkey: jax.Array        # (Q,) int32   registered buffer's rkey (read-only)
+    rxbit: jax.Array       # (Q,) int32   SR bitmap: bit k = epsn+k received
+    sr: jax.Array          # (Q,) int32   1 = selective-repeat RX mode
 
 
 class RxResult(NamedTuple):
@@ -72,6 +83,7 @@ class RxResult(NamedTuple):
     ack_qpn: jax.Array     # (N,) int32
     send_ack: jax.Array    # (N,) bool
     send_nak: jax.Array    # (N,) bool
+    sack: jax.Array        # (N,) int32  SR bitmap to ship with the ACK
     ecn_echo: jax.Array    # (N,) bool   CE-marked payload arrival (NP input)
     ecn_cnt: jax.Array     # (Q,) int32  CE-marked arrivals per QP this batch
 
@@ -101,10 +113,15 @@ def _rx_decide(state: Dict[str, jax.Array], p: Dict[str, jax.Array]
         (pk.WRITE_LAST, pk.WRITE_ONLY, pk.READ_RESP_LAST, pk.READ_RESP_ONLY),
         jnp.int32))
 
+    valid = p["valid"] > 0
+    sr = state["sr"] > 0
+
     in_seq = psn == epsn
-    dup = (psn - epsn) % (pk.PSN_MASK + 1) > (pk.PSN_MASK // 2)  # behind ePSN
-    ooo = ~in_seq & ~dup
+    behind = (psn - epsn) % (pk.PSN_MASK + 1) > (pk.PSN_MASK // 2)
     has_credit = credits > 0
+
+    # ---- go-back-N verdicts (the original in-order-only FSM) ----------
+    ooo_g = ~in_seq & ~behind
     # remote-access protection (§4.6): a RETH-bearing packet must present
     # the rkey of the registered buffer it targets; a mismatch is NAKed
     # with a protection error instead of being served.  Table rkey 0
@@ -113,21 +130,62 @@ def _rx_decide(state: Dict[str, jax.Array], p: Dict[str, jax.Array]
     # MIDDLE/LAST fragments carry no RETH and inherit the verdict
     # implicitly: a rejected FIRST never advances ePSN, so they fall
     # out as OOO.
-    rkey_ok = ~has_reth | (state["rkey"] == 0) | (p["rkey"] == state["rkey"])
+    rkey_ok_g = ~has_reth | (state["rkey"] == 0) | (p["rkey"] == state["rkey"])
 
-    accept = is_payload & in_seq & has_credit & rkey_ok & (p["valid"] > 0)
-    dropped_credit = (is_payload & in_seq & ~has_credit & rkey_ok &
-                      (p["valid"] > 0))
-    rkey_err = is_payload & in_seq & ~rkey_ok & (p["valid"] > 0)
+    accept_g = is_payload & in_seq & has_credit & rkey_ok_g & valid
+    dropped_g = is_payload & in_seq & ~has_credit & rkey_ok_g & valid
+    rkey_err_g = is_payload & in_seq & ~rkey_ok_g & valid
 
     # DMA command formation (RETH starts a region; MIDDLE/LAST continue it)
     start_addr = jnp.where(has_reth, p["vaddr"], state["cur_vaddr"])
-    dma_addr = start_addr
-    new_cur = jnp.where(accept, start_addr + plen, state["cur_vaddr"])
+    new_epsn_g = jnp.where(accept_g, (epsn + 1) & pk.PSN_MASK, epsn)
+
+    # ---- selective-repeat verdicts (out-of-order-tolerant window) -----
+    # Any PSN inside [epsn, epsn + SR_WINDOW) is acceptable; a per-QP
+    # bitmap remembers which offsets already landed.  Packets must be
+    # self-contained (per-packet address/rkey, ``fragment_message(...,
+    # addr_per_pkt=True)``) because an out-of-order arrival cannot lean
+    # on the FIRST fragment's RETH cursor.
+    d = ((psn - epsn) % (pk.PSN_MASK + 1)).astype(jnp.int32)
+    in_win = ~behind & (d < SR_WINDOW)
+    bit = jnp.where(
+        in_win, jnp.left_shift(jnp.int32(1), jnp.minimum(d, SR_WINDOW - 1)),
+        0).astype(jnp.int32)
+    already = (state["rxbit"] & bit) != 0
+    fresh = in_win & ~already
+    # every SR payload packet carries its rkey, so protection is checked
+    # on all of them (not just RETH opcodes)
+    rkey_ok_s = (state["rkey"] == 0) | (p["rkey"] == state["rkey"])
+    accept_s = is_payload & fresh & has_credit & rkey_ok_s & valid
+    dropped_s = is_payload & fresh & ~has_credit & rkey_ok_s & valid
+    rkey_err_s = is_payload & fresh & ~rkey_ok_s & valid
+    dup_s = (behind | already) & is_payload
+    ooo_s = ~behind & ~in_win & is_payload          # beyond the window
+
+    # bitmap update + cumulative advance over the contiguous prefix:
+    # count trailing ones of the updated bitmap via the lowest *zero*
+    # bit (ctz(~bm) = popcount((~bm & -~bm) - 1); ~bm always has a set
+    # bit above SR_WINDOW, so the count is <= SR_WINDOW)
+    bm = state["rxbit"] | jnp.where(accept_s, bit, 0)
+    inv = ~bm
+    adv = jax.lax.population_count((inv & -inv) - 1).astype(jnp.int32)
+    new_epsn_s = (epsn + adv) & pk.PSN_MASK
+    new_rxbit_s = jax.lax.shift_right_logical(bm, adv)
+
+    # ---- merge the two FSMs (per-QP mode select) ----------------------
+    accept = jnp.where(sr, accept_s, accept_g)
+    dup = jnp.where(sr, dup_s, behind & is_payload)
+    ooo = jnp.where(sr, ooo_s, ooo_g & is_payload)
+    dropped_credit = jnp.where(sr, dropped_s, dropped_g)
+    rkey_err = jnp.where(sr, rkey_err_s, rkey_err_g)
+    dma_addr = jnp.where(sr, p["vaddr"], start_addr)
+    new_epsn = jnp.where(sr, new_epsn_s, new_epsn_g)
+    new_rxbit = jnp.where(sr, new_rxbit_s, state["rxbit"])
+
+    new_cur = jnp.where(accept, dma_addr + plen, state["cur_vaddr"])
     new_bytes = jnp.where(
-        has_reth & accept, p["dma_len"].astype(jnp.int32) - plen,
+        (has_reth | sr) & accept, p["dma_len"].astype(jnp.int32) - plen,
         jnp.where(accept, state["bytes_left"] - plen, state["bytes_left"]))
-    new_epsn = jnp.where(accept, (epsn + 1) & pk.PSN_MASK, epsn)
     new_msn = jnp.where(accept & is_last, state["msn"] + 1, state["msn"])
     new_credits = jnp.where(accept, credits - 1, credits)
 
@@ -138,31 +196,42 @@ def _rx_decide(state: Dict[str, jax.Array], p: Dict[str, jax.Array]
         "cur_vaddr": new_cur,
         "credits": new_credits.astype(jnp.int32),
         "rkey": state["rkey"],
+        "rxbit": new_rxbit.astype(jnp.int32),
+        "sr": state["sr"],
     }
     out = {
-        "accept": accept, "dup": dup & is_payload, "ooo": ooo & is_payload,
+        "accept": accept, "dup": dup, "ooo": ooo,
         "dropped_credit": dropped_credit, "rkey_err": rkey_err,
         "dma_addr": dma_addr.astype(jnp.int32),
         "dma_len": plen.astype(jnp.int32),
-        "ack_psn": jnp.where(accept, psn, (new_epsn - 1) & pk.PSN_MASK
-                             ).astype(jnp.int32),
+        # cumulative ACK: accepted in-order packets ack their own PSN
+        # (== new_epsn - 1 for GBN); everything else re-acks the frontier
+        "ack_psn": jnp.where(~sr & accept, psn,
+                             (new_epsn - 1) & pk.PSN_MASK).astype(jnp.int32),
         "ack_qpn": p["qpn"].astype(jnp.int32),
-        # ACK policy: ack accepted last/ack_req packets and duplicates
-        "send_ack": (accept & (is_last | (p["ack_req"] > 0))) |
-                    (dup & is_payload),
-        "send_nak": ooo & is_payload,
+        # ACK policy: ack accepted last/ack_req packets and duplicates.
+        # SR additionally acks every out-of-order accept (the SACK is
+        # what releases the sender's slot) and every gap-filling accept
+        # that advanced the frontier by more than one.
+        "send_ack": (accept & (is_last | (p["ack_req"] > 0) |
+                               (sr & ((d > 0) | (adv > 1))))) | dup,
+        "send_nak": ooo,
+        # post-update bitmap, shipped with ACKs so the sender can
+        # selectively release held slots and resend only the gaps
+        "sack": jnp.where(sr, new_rxbit_s, 0).astype(jnp.int32),
         # ECN echo (DCQCN NP, §"opening the CC design space"): a CE mark
         # is congestion evidence regardless of the PSN verdict — dups and
         # credit-dropped packets crossed the congested queue too — so the
         # echo is stateless: every valid CE-marked payload packet counts.
-        "ecn_echo": (p["ecn"] > 0) & is_payload & (p["valid"] > 0),
+        "ecn_echo": (p["ecn"] > 0) & is_payload & valid,
     }
     return new_state, out
 
 
 _PKT_FIELDS = ("qpn", "opcode", "psn", "plen", "vaddr", "dma_len", "ack_req",
                "ecn", "rkey", "valid")
-_STATE_FIELDS = ("epsn", "msn", "bytes_left", "cur_vaddr", "credits", "rkey")
+_STATE_FIELDS = ("epsn", "msn", "bytes_left", "cur_vaddr", "credits", "rkey",
+                 "rxbit", "sr")
 
 
 def _rx_one(tables: RxTables, p) -> Tuple[RxTables, Dict]:
@@ -217,7 +286,7 @@ def rx_pipeline(tables: RxTables, batch: Dict[str, jax.Array]
 
 _OUT_KEYS = ("accept", "dup", "ooo", "dropped_credit", "rkey_err",
              "dma_addr", "dma_len", "ack_psn", "ack_qpn", "send_ack",
-             "send_nak", "ecn_echo")
+             "send_nak", "sack", "ecn_echo")
 _OUT_BOOL = ("accept", "dup", "ooo", "dropped_credit", "rkey_err",
              "send_ack", "send_nak", "ecn_echo")
 
@@ -426,6 +495,8 @@ def make_rx_tables(n_qps: int, initial_credits: int = 64) -> RxTables:
         cur_vaddr=jnp.zeros(n_qps, jnp.int32),
         credits=jnp.full((n_qps,), initial_credits, jnp.int32),
         rkey=jnp.zeros(n_qps, jnp.int32),
+        rxbit=jnp.zeros(n_qps, jnp.int32),
+        sr=jnp.zeros(n_qps, jnp.int32),
     )
 
 

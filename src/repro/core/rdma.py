@@ -61,9 +61,12 @@ class NodeStats:
     cnp_rx: int = 0              # CNPs received (RP)
     prot_errors: int = 0         # rkey mismatches NAKed at this responder
     nak_prot_rx: int = 0         # protection NAKs received (requester side)
+    sacked: int = 0              # slots released by selective ACK bitmaps
 
 
 CONGESTION_CONTROLS = ("ack_clocked", "static", "dcqcn")
+RX_MODES = ("go_back_n", "selective_repeat")
+PATH_SELECTS = (None, "ecmp", "spray")
 
 
 class RdmaNode:
@@ -73,7 +76,10 @@ class RdmaNode:
                  services: Optional[ServiceChain] = None,
                  sniffer=None, engine: str = "batched",
                  congestion_control: str = "ack_clocked",
-                 dcqcn: Optional[DcqcnConfig] = None):
+                 dcqcn: Optional[DcqcnConfig] = None,
+                 rx_mode: str = "go_back_n",
+                 path_select: Optional[str] = None,
+                 sr_gap_lag: int = 12):
         if engine not in pipe.RX_ENGINES:
             raise ValueError(f"unknown engine {engine!r}; "
                              f"choose from {sorted(pipe.RX_ENGINES)}")
@@ -81,17 +87,41 @@ class RdmaNode:
             raise ValueError(
                 f"unknown congestion_control {congestion_control!r}; "
                 f"choose from {CONGESTION_CONTROLS}")
+        if rx_mode not in RX_MODES:
+            raise ValueError(f"unknown rx_mode {rx_mode!r}; "
+                             f"choose from {RX_MODES}")
+        if path_select not in PATH_SELECTS:
+            raise ValueError(f"unknown path_select {path_select!r}; "
+                             f"choose from {PATH_SELECTS}")
+        if rx_mode == "selective_repeat" and fc_window > pipe.SR_WINDOW:
+            raise ValueError(
+                f"fc_window={fc_window} exceeds the selective-repeat "
+                f"receive window ({pipe.SR_WINDOW}): the sender could "
+                f"legally burst past what the RX bitmap can hold")
         self.node_id = node_id
-        self.net = network                   # Network or SwitchedFabric
+        self.net = network                   # Network / SwitchedFabric / Clos
         self.engine = engine
         self._rx_pipe = pipe.RX_ENGINES[engine]
         self.mtu = mtu
+        self.rx_mode = rx_mode
+        self._sr = rx_mode == "selective_repeat"
+        self.path_select = path_select
+        self.sr_gap_lag = sr_gap_lag
         self.qp = QPManager(n_qps, node_id)
         self.rx_tables = pipe.make_rx_tables(n_qps, rx_credits)
+        if self._sr:
+            # whole-node RX mode: both peers of a QP must agree on it
+            # (a selective-repeat sender emits per-packet RETHs)
+            self.rx_tables = self.rx_tables._replace(
+                sr=jnp.ones_like(self.rx_tables.sr))
         self.tx_tables = pipe.make_tx_tables(n_qps)
         self.fc = AckClockedFlowControl(n_qps, FlowControlConfig(
             fc_window, congestion_control=congestion_control,
             dcqcn=dcqcn if dcqcn is not None else DcqcnConfig()))
+        if (self.fc.rate is not None and path_select == "spray"
+                and getattr(network, "n_paths", 1) > 1):
+            # per-spine DCQCN: CNPs attribute congestion to one plane
+            self.fc.rate.enable_multipath(network.n_paths)
         self.credits = CreditManager(n_qps, rx_credits, rx_credits)
         self.retx = RetransmissionBuffer(timeout_ticks=64)
         self.services = services
@@ -121,6 +151,15 @@ class RdmaNode:
         # limiter sits at the wire, so resends are paced like first
         # transmissions instead of bursting back into the hot queue)
         self._retx_staged: Dict[int, List[pk.Packet]] = {}
+        # selective-repeat host state --------------------------------------
+        # out-of-order byte intervals not yet contiguous with the
+        # watermark: qpn -> {start byte: end byte}
+        self._sr_pend: Dict[int, Dict[int, int]] = {}
+        # LAST/ONLY packets accepted out of order: their message
+        # completion is deferred until epsn passes them
+        self._sr_pending_last: Dict[int, List[int]] = {}
+        self._last_gap_resend: Dict[int, int] = {}   # qpn -> tick
+        self._path_rr: Dict[int, int] = {}           # qpn -> spray cursor
 
     # ------------------------------------------------------------- verbs
     def init_rdma(self, max_size: int, remote: "RdmaNode",
@@ -191,6 +230,7 @@ class RdmaNode:
         """Re-arm the watermark before issuing a new transfer whose DMA
         addresses restart at the buffer base."""
         self._rx_progress.pop(qpn, None)
+        self._sr_pend.pop(qpn, None)
 
     def expected_completions(self, nbytes: int) -> int:
         """How many RX completions one ``rdma_write`` of ``nbytes``
@@ -235,7 +275,8 @@ class RdmaNode:
         pkts = pk.fragment_message(
             int(t.remote_qpn[qpn]), start_psn, remote_addr, rkey, data,
             op=op, mtu=self.mtu, src_ip=self.node_id,
-            dst_ip=int(t.remote_ip[qpn]), coll=coll)
+            dst_ip=int(t.remote_ip[qpn]), coll=coll,
+            addr_per_pkt=self._sr)
         t.npsn[qpn] = (start_psn + len(pkts)) & pk.PSN_MASK
         for p in pkts:
             # retransmission buffer holds every payload until remote ACK
@@ -257,10 +298,33 @@ class RdmaNode:
 
     def _send(self, local_qpn: int, p: pk.Packet):
         self.stats.tx_pkts += 1
+        n_paths = getattr(self.net, "n_paths", 0)
+        if self.path_select and n_paths > 1 and p.opcode in pk.PAYLOAD_OPS:
+            # stamp the spine this payload should ride; control packets
+            # stay unstamped (the fabric picks).  Happens AFTER the
+            # retransmit buffer cloned the packet, so a resend re-picks
+            # its path — re-sending down a failed or congested spine
+            # would repeat the very loss being repaired.
+            p.path_id = self._pick_path(local_qpn, n_paths)
         if self.sniffer is not None:
             self.sniffer.capture(p, self.net.now, direction="tx")
         dst = self._peer[local_qpn]
         self.net.send(self.node_id, dst, p)
+
+    def _pick_path(self, qpn: int, n_paths: int) -> int:
+        paths = getattr(self.net, "alive_paths", None) \
+            or tuple(range(n_paths))
+        if self.path_select == "ecmp":
+            # stable per-flow hash: one QP stays on one spine
+            h = (qpn * 0xC2B2AE3D + self.node_id * 0x9E3779B1) & 0xFFFFFFFF
+            return paths[h % len(paths)]
+        rate = self.fc.rate
+        if rate is not None and rate.multipath:
+            # congestion-aware spray: weight by per-path DCQCN tokens
+            return rate.pick_path(qpn, paths)
+        c = self._path_rr.get(qpn, 0)
+        self._path_rr[qpn] = c + 1
+        return paths[c % len(paths)]
 
     # -------------------------------------------------------- RX internals
     def on_packets(self, pkts: List[pk.Packet]):
@@ -310,7 +374,14 @@ class RdmaNode:
         ecn_cnt = np.asarray(res.pop("ecn_cnt"))     # (Q,) per-QP CE tally
         res = {k: np.asarray(v)[:n] for k, v in res.items()}
         self.credits.credits = list(np.asarray(self.rx_tables.credits))
-        self._emit_cnps(ecn_cnt)
+        # attribute CE marks to the spine that carried them, so the CNP
+        # can steer the sender's per-path rate cut (ecn_cnt only says
+        # *which QP*; the packet's path_id says which plane)
+        ce_path: Dict[int, int] = {}
+        for p in data_pkts:
+            if p.ecn and p.opcode in pk.PAYLOAD_OPS:
+                ce_path[p.qpn] = p.path_id
+        self._emit_cnps(ecn_cnt, ce_path)
 
         # ---- service chain over the accepted payload stream -------------
         payload = batch_np["payload"][:n]
@@ -336,23 +407,37 @@ class RdmaNode:
                     a = int(res["dma_addr"][i])
                     ln = int(res["dma_len"][i])
                     buf[a:a + ln] = payload[i][:ln]
-                    # in-order acceptance makes this the contiguous
-                    # frontier (max against replays of acked data)
-                    self._rx_progress[qpn] = max(
-                        self._rx_progress.get(qpn, 0), a + ln)
+                    if self._sr:
+                        # out-of-order acceptance: merge the landed
+                        # interval, advance the contiguous watermark
+                        # only when the gap before it has filled
+                        self._sr_note_progress(qpn, a, ln)
+                    else:
+                        # in-order acceptance makes this the contiguous
+                        # frontier (max against replays of acked data)
+                        self._rx_progress[qpn] = max(
+                            self._rx_progress.get(qpn, 0), a + ln)
                 self.credits.note_accepted(qpn)
                 # host consumes the payload -> credit returns (paper §4.3)
                 self._replenish_credit(qpn)
                 if res["send_ack"][i]:
                     self._send_ctrl(qpn, pk.make_ack(
-                        self._remote_qpn(qpn), int(res["ack_psn"][i])))
+                        self._remote_qpn(qpn), int(res["ack_psn"][i]),
+                        sack=int(res["sack"][i])))
                 if p.opcode in (pk.WRITE_LAST, pk.WRITE_ONLY,
                                 pk.READ_RESP_LAST, pk.READ_RESP_ONLY):
-                    self._completions[qpn] = self._completions.get(qpn, 0) + 1
+                    if self._sr:
+                        # completion only once every earlier PSN landed
+                        self._sr_pending_last.setdefault(
+                            qpn, []).append(p.psn)
+                    else:
+                        self._completions[qpn] = \
+                            self._completions.get(qpn, 0) + 1
             elif res["dup"][i]:
                 self.stats.dup_dropped += 1
                 self._send_ctrl(qpn, pk.make_ack(self._remote_qpn(qpn),
-                                                 int(res["ack_psn"][i])))
+                                                 int(res["ack_psn"][i]),
+                                                 sack=int(res["sack"][i])))
             elif res["dropped_credit"][i]:
                 self.stats.credit_dropped += 1   # silent drop: peer retransmits
                 self.credits.note_dropped(qpn)
@@ -367,19 +452,91 @@ class RdmaNode:
                 self._send_ctrl(qpn, pk.make_ack(self._remote_qpn(qpn),
                                                  int(res["ack_psn"][i]),
                                                  nak=True))
+        if self._sr and self._sr_pending_last:
+            self._flush_sr_completions()
+
+    # ---- selective-repeat host bookkeeping -----------------------------
+    def _sr_note_progress(self, qpn: int, a: int, ln: int):
+        """Merge the byte interval ``[a, a+ln)`` into this QP's landed
+        set and advance the contiguous watermark over any now-filled
+        gaps — the streaming-consumer invariant (every byte below the
+        watermark is present) survives out-of-order DMA."""
+        pend = self._sr_pend.setdefault(qpn, {})
+        pend[a] = max(pend.get(a, 0), a + ln)
+        fr = self._rx_progress.get(qpn, 0)
+        advanced = True
+        while advanced:
+            advanced = False
+            for s in sorted(pend):
+                if s > fr:
+                    break
+                fr = max(fr, pend.pop(s))
+                advanced = True
+        self._rx_progress[qpn] = fr
+        if not pend:
+            self._sr_pend.pop(qpn, None)
+
+    def _flush_sr_completions(self):
+        """Deferred message completions: a LAST/ONLY fragment accepted
+        out of order completes only when the receive window's cumulative
+        edge (epsn) has passed it — i.e. every fragment before it
+        landed."""
+        span = pk.PSN_MASK + 1
+        epsn_col = np.asarray(self.rx_tables.epsn)
+        for qpn in list(self._sr_pending_last):
+            epsn = int(epsn_col[qpn])
+            lst = self._sr_pending_last[qpn]
+            done = [ps for ps in lst
+                    if ((ps - epsn) % span) > pk.PSN_MASK // 2]
+            if not done:
+                continue
+            self._completions[qpn] = self._completions.get(qpn, 0) \
+                + len(done)
+            rest = [ps for ps in lst
+                    if ((ps - epsn) % span) <= pk.PSN_MASK // 2]
+            if rest:
+                self._sr_pending_last[qpn] = rest
+            else:
+                del self._sr_pending_last[qpn]
 
     def _on_ack(self, p: pk.Packet):
         qpn = self._local_qpn(p.qpn)
         released = self.retx.ack(qpn, p.ack_psn)
+        if p.sack_bits:
+            sacked = self.retx.sack_release(qpn, p.ack_psn, p.sack_bits)
+            self.stats.sacked += sacked
+            released += sacked
+            self._maybe_gap_resend(qpn, p)
         for passed in self.fc.ack(qpn, max(released, 1)):
             self._dispatch(qpn, passed[1])
 
+    def _maybe_gap_resend(self, qpn: int, p: pk.Packet):
+        """Selective-repeat fast retransmit: the SACK bitmap proves
+        delivery up to its highest bit, so held slots lagging it by
+        ``sr_gap_lag``+ PSNs are gaps (lost, not just reordered) —
+        resend exactly those, rate-limited like NAK bursts."""
+        if qpn in self._fatal_qps:
+            return
+        last = self._last_gap_resend.get(qpn, -10**9)
+        if self.net.now - last < self.NAK_HOLDOFF:
+            return
+        hi = (p.ack_psn + p.sack_bits.bit_length()) & pk.PSN_MASK
+        resend = self.retx.gap_resend(qpn, p.ack_psn, hi,
+                                      self.sr_gap_lag, self.net.now)
+        if resend:
+            self._last_gap_resend[qpn] = self.net.now
+            for rp in resend:
+                self._send_retx(qpn, rp)
+
     CNP_HOLDOFF = 8      # ticks: NP-side CNP coalescing window per QP
 
-    def _emit_cnps(self, ecn_cnt: np.ndarray):
+    def _emit_cnps(self, ecn_cnt: np.ndarray,
+                   ce_path: Optional[Dict[int, int]] = None):
         """DCQCN NP role: one (coalesced) CNP per QP that saw CE marks in
         this batch.  Runs unconditionally — the notification point needs
-        no local DCQCN state, so any receiver disciplines any sender."""
+        no local DCQCN state, so any receiver disciplines any sender.
+        ``ce_path`` maps QP -> the spine a CE-marked packet crossed; the
+        CNP echoes it so a multipath reaction point cuts that plane."""
         for qpn in np.nonzero(ecn_cnt)[0]:
             qpn = int(qpn)
             self.stats.ecn_marked_rx += int(ecn_cnt[qpn])
@@ -388,8 +545,10 @@ class RdmaNode:
                 continue
             self._last_cnp_sent[qpn] = self.net.now
             self.stats.cnp_tx += 1
+            path = ce_path.get(qpn, -1) if ce_path else -1
             self._send_ctrl(qpn, pk.make_cnp(self._remote_qpn(qpn),
-                                             src_ip=self.node_id))
+                                             src_ip=self.node_id,
+                                             path_id=path))
 
     def _on_cnp(self, p: pk.Packet):
         """DCQCN RP role: cut this QP's rate.  A CNP is a pure
@@ -397,7 +556,7 @@ class RdmaNode:
         ACK-clocked budget (go-back-N state is untouched)."""
         qpn = self._local_qpn(p.qpn)
         self.stats.cnp_rx += 1
-        self.fc.on_cnp(qpn, self.net.now)
+        self.fc.on_cnp(qpn, self.net.now, path=p.path_id)
 
     NAK_HOLDOFF = 8      # ticks: rate-limit go-back-N resend bursts
 
@@ -505,7 +664,10 @@ class RdmaNode:
         self.fc.budget[qpn] = self.fc.cfg.window
         self._last_nak_resend.pop(qpn, None)
         self._last_cnp_sent.pop(qpn, None)
+        self._last_gap_resend.pop(qpn, None)
         self._rx_progress.pop(qpn, None)
+        self._sr_pend.pop(qpn, None)
+        self._sr_pending_last.pop(qpn, None)
         self.qp_errors.discard(qpn)
         self._fatal_qps.discard(qpn)
         self.qp.reestablish(qpn, start_psn)
@@ -515,7 +677,8 @@ class RdmaNode:
             epsn=self.rx_tables.epsn.at[qpn].set(start_psn),
             msn=self.rx_tables.msn.at[qpn].set(0),
             bytes_left=self.rx_tables.bytes_left.at[qpn].set(0),
-            cur_vaddr=self.rx_tables.cur_vaddr.at[qpn].set(0))
+            cur_vaddr=self.rx_tables.cur_vaddr.at[qpn].set(0),
+            rxbit=self.rx_tables.rxbit.at[qpn].set(0))
         t.npsn[qpn] = start_psn
 
     # ------------------------------------------------------------ helpers

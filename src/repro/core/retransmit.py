@@ -68,6 +68,49 @@ class RetransmissionBuffer:
         """PSN sequence error at the peer: retransmit from expected_psn."""
         return self._resend(qpn, expected_psn, now)
 
+    def sack_release(self, qpn: int, ack_psn: int, sack_bits: int) -> int:
+        """Selective ACK: release the individually-acknowledged slots a
+        selective-repeat receiver reports holding out of order (bitmap
+        bit k => PSN ``ack_psn + 1 + k`` received).  Returns the number
+        released.  Like cumulative progress, a selective release resets
+        the remaining slots' retry counters — the peer demonstrably got
+        packets, so the flow is not stuck."""
+        q = self.slots.get(qpn, {})
+        released = 0
+        k = 1                        # bit 0 (= ack_psn + 1 in sequence)
+        bits = sack_bits >> 1        # would be a cumulative advance
+        while bits:
+            if bits & 1:
+                psn = (ack_psn + 1 + k) & pk.PSN_MASK
+                if q.pop(psn, None) is not None:
+                    released += 1
+            bits >>= 1
+            k += 1
+        if released:
+            for slot in q.values():
+                slot.retries = 0
+        return released
+
+    def gap_resend(self, qpn: int, ack_psn: int, upto_psn: int,
+                   min_lag: int, now: int) -> List[pk.Packet]:
+        """Selective-repeat fast retransmit: resend only the *gaps* — the
+        held slots strictly after the cumulative ACK but at least
+        ``min_lag`` PSNs behind ``upto_psn`` (the highest PSN the
+        receiver's SACK proves delivered).  The lag guard keeps plain
+        multipath reorder (fast-spine packets overtaking slow-spine
+        ones) from triggering spurious resends; a real loss keeps
+        falling further behind the SACK frontier until it crosses the
+        threshold."""
+        span = pk.PSN_MASK + 1
+        q = self.slots.get(qpn, {})
+        out = []
+        for slot in sorted(q.values(), key=lambda s: s.psn):
+            after_ack = 0 < ((slot.psn - ack_psn) % span) <= pk.PSN_MASK // 2
+            lag = (upto_psn - slot.psn) % span
+            if after_ack and lag <= pk.PSN_MASK // 2 and lag >= min_lag:
+                out.extend(self._bump(qpn, slot, now))
+        return out
+
     def tick(self, now: int) -> List[Tuple[int, pk.Packet]]:
         """Transport timer: collect timed-out (local_qpn, packet) pairs.
         Slots that exhausted their retry budget are evicted (fatal for
