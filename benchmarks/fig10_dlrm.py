@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks._util import emit
+from repro.core import telemetry as tm
 from repro.core.ingest import (BalboaIngest, IngestConfig,
                                make_dlrm_tile_decoder)
 from repro.core.services import PreprocService, ServiceChain
@@ -90,21 +91,38 @@ def sync_baseline(n_pkts: int) -> dict:
             "host_bytes": ing.host_payload_bytes}
 
 
-def streamed(n_pkts: int, n_replicas: int, tile_pkts: int = 2) -> dict:
+def streamed(n_pkts: int, n_replicas: int, tile_pkts: int = 2,
+             telemetry: bool = False) -> dict:
     ing = BalboaIngest(
         IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=n_replicas,
                      link_bw_pkts_per_tick=1, tile_pkts=tile_pkts),
         None, _shard_fn(n_pkts),
         tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, MOD))
+    reg = None
+    if telemetry:
+        rec = tm.FlightRecorder(capacity=1 << 20)
+        ing.attach_recorder(rec)
+        reg = tm.MetricRegistry()
+        tm.register_fabric(reg, ing.net)
+        tm.register_node(reg, ing.trainer, "trainer")
+        reg.register("ingest", ing.snapshot)
+        tm.register_recorder(reg, rec)
     t0w = time.perf_counter()
     batch, rep = ing.fetch_shard_streaming(0)
     jax.block_until_ready(batch["dense"])
-    return {"ticks": rep.ticks, "nbytes": rep.nbytes,
-            "goodput": rep.goodput_bytes_per_tick,
-            "overlap": rep.overlap_efficiency,
-            "tiles": rep.tiles, "stripes": len(rep.stripes),
-            "wall_s": time.perf_counter() - t0w,
-            "host_bytes": ing.host_payload_bytes}
+    out = {"ticks": rep.ticks, "nbytes": rep.nbytes,
+           "goodput": rep.goodput_bytes_per_tick,
+           "overlap": rep.overlap_efficiency,
+           "tiles": rep.tiles, "stripes": len(rep.stripes),
+           "wall_s": time.perf_counter() - t0w,
+           "host_bytes": ing.host_payload_bytes}
+    if reg is not None:
+        snap = reg.snapshot()
+        by = snap["flight"]["by_kind"]
+        assert by.get("stream_tile", 0) == rep.tiles, \
+            "stream_tile events != report tiles"
+        out["telemetry"] = reg.flat(snap)
+    return out
 
 
 def ingest_sweep(smoke: bool) -> dict:
@@ -115,7 +133,7 @@ def ingest_sweep(smoke: bool) -> dict:
          f"Bptick={sync['goodput']:.0f};host_bytes={sync['host_bytes']}")
     out = {"n_pkts": n_pkts, "sync": sync, "streamed": {}}
     for r in replicas:
-        s = streamed(n_pkts, r)
+        s = streamed(n_pkts, r, telemetry=(r == max(replicas)))
         out["streamed"][r] = s
         emit(f"fig10_stream_r{r}", s["ticks"],
              f"Bptick={s['goodput']:.0f};"

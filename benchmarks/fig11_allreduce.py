@@ -36,6 +36,7 @@ import json
 import numpy as np
 
 from benchmarks._util import emit
+from repro.core import telemetry as tm
 from repro.core.collectives import allreduce_oracle, make_ring_group
 from repro.core.netsim import FabricConfig, dcqcn_fabric_profile
 
@@ -52,7 +53,8 @@ def _tensors(world: int, n_elems: int, seed: int = 13):
 
 
 def allreduce_arm(world: int, n_elems: int, *, offload: bool,
-                  cc: str = "ack_clocked", fabric_cfg=None) -> dict:
+                  cc: str = "ack_clocked", fabric_cfg=None,
+                  telemetry: bool = False) -> dict:
     """One measured allreduce, output verified bit-identical to the
     oracle."""
     if fabric_cfg is None:
@@ -60,6 +62,14 @@ def allreduce_arm(world: int, n_elems: int, *, offload: bool,
     g = make_ring_group(world, max_bytes=n_elems * 4 + world * 4,
                         fabric_cfg=fabric_cfg, offload=offload,
                         congestion_control=cc)
+    reg = None
+    if telemetry:
+        rec = tm.FlightRecorder(capacity=1 << 20)
+        g.attach_recorder(rec)
+        reg = tm.MetricRegistry()
+        tm.register_fabric(reg, g.net)
+        reg.register("collective", g.snapshot)
+        tm.register_recorder(reg, rec)
     xs = _tensors(world, n_elems)
     out = g.allreduce(xs)
     want = allreduce_oracle(xs)
@@ -87,6 +97,11 @@ def allreduce_arm(world: int, n_elems: int, *, offload: bool,
                    switch_acks=red.acks_synthesized,
                    switch_naks=red.naks_synthesized,
                    switch_peak_slots=red.peak_slots)
+    if reg is not None:
+        snap = reg.snapshot()
+        by = snap["flight"]["by_kind"]
+        assert by.get("coll_transfer", 0) == g.stats.transfers
+        res["telemetry"] = reg.flat(snap)
     return res
 
 
@@ -144,6 +159,8 @@ def main(argv=None):
     else:
         results["allreduce"] = sweep()
         results["lossy"] = lossy_arm()
+    results["instrumented"] = allreduce_arm(
+        4, 16_384, offload=True, telemetry=True)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)

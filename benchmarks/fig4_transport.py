@@ -8,16 +8,20 @@ host-pipeline throughput (MB/s through the jitted RX pipeline + chain).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
 
 from benchmarks._util import emit
 from repro.core import packet as pk
+from repro.core import telemetry as tm
 from repro.core.netsim import LinkConfig, Network
 from repro.core.rdma import RdmaNode, run_network
 
 SIZES = (64, 1024, 4096, 32768, 262144, 1048576)
+SMOKE_SIZES = (64, 4096, 32768)
 
 
 def run_once(size: int, op: str = "write"):
@@ -55,17 +59,60 @@ def throughput(size: int, n_bufs: int = 64):
     return wall, eff, mbs
 
 
-def main():
-    for size in SIZES:
+def telemetry_run(size: int = 32768) -> dict:
+    """One fully instrumented WRITE: fabric + both nodes registered in
+    a ``MetricRegistry``, flat snapshot embedded in the ``--json``
+    output (what ``benchmarks/regress.py`` ingests)."""
+    net = Network(2, LinkConfig(latency_ticks=3, seed=1))
+    a, b = RdmaNode(0, net), RdmaNode(1, net)
+    qpn_a, _, _ = a.init_rdma(max(size, 4096) * 2, b)
+    reg, rec = tm.instrument(fabric=net, nodes=[a, b])
+    data = np.random.default_rng(0).integers(0, 256, size, dtype=np.uint8)
+    a.rdma_write(qpn_a, data)
+    ticks = run_network([a, b], max_ticks=200_000)
+    assert b.check_completed(1) >= 1
+    snap = reg.snapshot()
+    by = snap["flight"]["by_kind"]
+    assert by.get("inject", 0) + by.get("wire_drop", 0) == \
+        snap["fabric"]["injected"]
+    return {"ticks": ticks, "bytes": size, "telemetry": reg.flat(snap)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes only (CI bench job)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write results as JSON to PATH")
+    args = ap.parse_args(argv)
+
+    sizes = SMOKE_SIZES if args.smoke else SIZES
+    tput_sizes = (4096,) if args.smoke else (4096, 32768, 262144)
+    n_bufs = 4 if args.smoke else 16
+    results = {"mode": "smoke" if args.smoke else "full",
+               "latency": {}, "throughput": {}}
+    for size in sizes:
         ticks, wall, _ = run_once(size, "write")
         emit(f"fig4_write_latency_{size}B", wall * 1e6,
              f"ticks={ticks}")
+        results["latency"][str(size)] = {"op": "write", "ticks": ticks,
+                                         "wall_us": round(wall * 1e6, 1)}
         ticks, wall, _ = run_once(size, "read")
         emit(f"fig4_read_latency_{size}B", wall * 1e6, f"ticks={ticks}")
-    for size in (4096, 32768, 262144):
-        wall, eff, mbs = throughput(size, n_bufs=16)
-        emit(f"fig4_write_throughput_{size}B", wall * 1e6 / 16,
+        results["latency"][str(size)]["read_ticks"] = ticks
+    for size in tput_sizes:
+        wall, eff, mbs = throughput(size, n_bufs=n_bufs)
+        emit(f"fig4_write_throughput_{size}B", wall * 1e6 / n_bufs,
              f"host_MBps={mbs:.1f};protocol_efficiency={eff:.3f}")
+        results["throughput"][str(size)] = {
+            "protocol_efficiency": round(eff, 4),
+            "host_MBps": round(mbs, 1)}
+    results["instrumented_write"] = telemetry_run(
+        4096 if args.smoke else 32768)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,9 @@ processing pipeline — not the checksum — dominates the stack latency.
 """
 from __future__ import annotations
 
+import argparse
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +18,7 @@ import numpy as np
 from benchmarks._util import emit, time_fn
 from repro.core import packet as pk
 from repro.core import pipeline as pipe
+from repro.core import telemetry as tm
 from repro.core.retransmit import RetransmissionBuffer
 from repro.core.services import AesService, DpiService, PreprocService
 from repro.data.dpi_dataset import make_dataset
@@ -24,12 +28,27 @@ from repro.kernels import ops
 BATCH = 16
 
 
-def main():
-    rng = np.random.default_rng(0)
-    x, y = make_dataset(1024, seed=0)
-    dpi_params = train_dpi_params(x, y, steps=150)
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="64 B stage only, short DPI training (CI)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write results as JSON to PATH")
+    args = ap.parse_args(argv)
 
-    for size in (64, 4096):
+    reg = tm.MetricRegistry()
+    results = {"mode": "smoke" if args.smoke else "full", "stages": {}}
+    rng = np.random.default_rng(0)
+    x, y = make_dataset(256 if args.smoke else 1024, seed=0)
+    dpi_params = train_dpi_params(x, y, steps=30 if args.smoke else 150)
+
+    def stage(name: str, size: int, us: float):
+        emit(f"fig5_{name}_{size}B", us / BATCH, "per-packet")
+        results["stages"].setdefault(str(size), {})[name] = \
+            round(us / BATCH, 3)
+        reg.gauge(f"fig5/{name}/{size}B_us_per_pkt", us / BATCH)
+
+    for size in ((64,) if args.smoke else (64, 4096)):
         pay = rng.integers(0, 256, (BATCH, 4096), dtype=np.uint8)
         plen = np.full(BATCH, size, np.int32)
         payj, plenj = jnp.asarray(pay), jnp.asarray(plen)
@@ -42,11 +61,11 @@ def main():
                  for k, v in pk.batch_from_packets(pkts).items()}
         tables = pipe.make_rx_tables(8)
         us = time_fn(lambda: pipe.rx_pipeline(tables, batch))
-        emit(f"fig5_rx_pipeline_{size}B", us / BATCH, "per-packet")
+        stage("rx_pipeline", size, us)
 
         # 2) ICRC
         us = time_fn(lambda: ops.crc32(payj, plenj))
-        emit(f"fig5_icrc_{size}B", us / BATCH, "per-packet")
+        stage("icrc", size, us)
 
         # 3) retransmission buffering (host mux)
         def retx_cycle():
@@ -60,22 +79,28 @@ def main():
         for _ in range(20):
             retx_cycle()
         us = (_t.perf_counter() - t0) / 20 * 1e6
-        emit(f"fig5_retx_mux_{size}B", us / BATCH, "per-packet")
+        stage("retx_mux", size, us)
 
         # 4) AES on-path
         aes = AesService(key=np.arange(16, dtype=np.uint8))
         us = time_fn(lambda: aes(payj, plenj))
-        emit(f"fig5_aes_{size}B", us / BATCH, "per-packet")
+        stage("aes", size, us)
 
         # 5) DPI parallel-path
         dpi = DpiService(params=dpi_params)
         us = time_fn(lambda: dpi(payj, plenj))
-        emit(f"fig5_dpi_{size}B", us / BATCH, "per-packet")
+        stage("dpi", size, us)
 
         # 6) DLRM preprocessing
         pre = PreprocService()
         us = time_fn(lambda: pre(payj, plenj))
-        emit(f"fig5_preproc_{size}B", us / BATCH, "per-packet")
+        stage("preproc", size, us)
+
+    results["telemetry"] = reg.flat()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 from benchmarks._util import emit, time_fn
 from repro.core import packet as pk
 from repro.core import pipeline as pipe
+from repro.core import telemetry as tm
 from repro.core.netsim import (FabricConfig, LinkConfig, Network,
                                clos_incast_scenario, dcqcn_fabric_profile,
                                incast_scenario)
@@ -265,12 +266,60 @@ def multipath_sweep(fan_ins=(2, 4), message_bytes: int = 65536,
     return results
 
 
+def traced_incast(n_senders: int = 8, message_bytes: int = 32768,
+                  trace_path=None) -> dict:
+    """The acceptance scenario: an 8:1 Clos incast with a mid-run spine
+    failure, flight-recorded end to end.  Exports a Perfetto JSON trace
+    (tracks = ports / uplinks / spines / QPs) and asserts the trace's
+    event counts reconcile exactly with the ``MetricRegistry``
+    snapshot."""
+    rec = tm.FlightRecorder(capacity=1 << 20)
+    res = clos_incast_scenario(n_senders, message_bytes=message_bytes,
+                               rx_mode="selective_repeat",
+                               path_select="spray", fail_spine_at=10,
+                               recorder=rec)
+    reg, _ = tm.instrument(fabric=res.fabric,
+                           nodes=[res.receiver] + res.senders,
+                           recorder=rec)
+    snap = reg.snapshot()
+    assert rec.dropped_events == 0, "ring wrapped: raise capacity"
+    by = snap["flight"]["by_kind"]
+    # exact reconciliation: every counted occurrence has its event
+    assert by.get("inject", 0) + by.get("wire_drop", 0) == \
+        snap["fabric"]["injected"], \
+        f"inject+wire_drop events != injected counter"
+    retx = sum(s.stats.retransmissions for s in res.senders) \
+        + res.receiver.stats.retransmissions
+    assert by.get("retransmit", 0) == retx, \
+        f"retransmit events {by.get('retransmit')} != stats {retx}"
+    cnps = sum(s.stats.cnp_rx for s in res.senders) \
+        + res.receiver.stats.cnp_rx
+    assert by.get("cnp_rx", 0) == cnps
+    # the fabric is quiescent: every admitted packet either drained or
+    # was flushed by the spine failure
+    assert by.get("enqueue", 0) == \
+        by.get("dequeue", 0) + by.get("flush", 0), \
+        "enqueue/dequeue/flush events do not balance"
+    n_trace = len(rec.events())
+    if trace_path:
+        rec.export_chrome_trace(trace_path)
+        emit("fig6_trace", 0.0,
+             f"path={trace_path};events={n_trace};"
+             f"kinds={len(by)}")
+    return {"fan_in": n_senders, "message_bytes": message_bytes,
+            "ticks": res.ticks, "trace_events": n_trace,
+            "telemetry": reg.flat(snap)}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CC sweep only (CI bench job)")
     ap.add_argument("--json", metavar="PATH",
                     help="write results as JSON to PATH")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="export a Perfetto/Chrome-trace JSON of the "
+                         "8:1 spine-failure incast to PATH")
     args = ap.parse_args(argv)
 
     results = {"mode": "smoke" if args.smoke else "full"}
@@ -300,6 +349,9 @@ def main(argv=None):
         incast()
         results["incast_cc"] = incast_cc_sweep()
         results["multipath"] = multipath_sweep()
+    results["traced_incast"] = traced_incast(
+        message_bytes=16384 if args.smoke else 32768,
+        trace_path=args.trace)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)

@@ -10,6 +10,8 @@ architectural gap, which on real hardware is compounded by the FPGA's
 line rate; see EXPERIMENTS.md)."""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -17,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks._util import emit, time_fn
+from repro.core import telemetry as tm
 from repro.core.services import AesService, ServiceChain
 from repro.kernels import ops
 from repro.kernels.ref import expand_key
@@ -24,9 +27,18 @@ from repro.kernels.ref import expand_key
 KEY = np.arange(16, dtype=np.uint8)
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="64 KB transfer only (CI bench job)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write results as JSON to PATH")
+    args = ap.parse_args(argv)
+
+    reg = tm.MetricRegistry()
+    results = {"mode": "smoke" if args.smoke else "full", "transfers": {}}
     rk = expand_key(KEY)
-    for total_kb in (64, 512, 4096):
+    for total_kb in ((64,) if args.smoke else (64, 512, 4096)):
         n_pkts = total_kb * 1024 // 4096
         pay = np.random.default_rng(0).integers(
             0, 256, (n_pkts, 4096), dtype=np.uint8)
@@ -44,7 +56,7 @@ def main():
 
         # --- host path: per-buffer dispatch + staging copies --------------
         t0 = time.perf_counter()
-        iters = 3
+        iters = 1 if args.smoke else 3
         for _ in range(iters):
             out = np.empty_like(pay)
             for i in range(n_pkts):             # doorbell-per-buffer
@@ -55,6 +67,16 @@ def main():
         emit(f"fig7_aes_host_{total_kb}KB", host_us,
              f"MBps={total_kb/1024/(host_us/1e6):.1f};"
              f"speedup={host_us/on_us:.1f}x")
+        results["transfers"][str(total_kb)] = {
+            "onpath_us": round(on_us, 1), "host_us": round(host_us, 1),
+            "speedup": round(host_us / on_us, 2)}
+        reg.gauge(f"fig7/{total_kb}KB/speedup", host_us / on_us)
+
+    results["telemetry"] = reg.flat()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -8,21 +8,32 @@
     parallel path hides it; we report the measured delta)."""
 from __future__ import annotations
 
+import argparse
+import json
+
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks._util import emit, time_fn
+from repro.core import telemetry as tm
 from repro.core.services import AesService, DpiService, ServiceChain
 from repro.data.dpi_dataset import make_dataset, payload_with_embedded_malware
 from repro.kernels.dpi_mlp import train_dpi_params
 
 
-def main():
-    x, y = make_dataset(4096, seed=0)
-    params = train_dpi_params(x, y, steps=300)
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small dataset + short training (CI bench job)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write results as JSON to PATH")
+    args = ap.parse_args(argv)
+
+    x, y = make_dataset(512 if args.smoke else 4096, seed=0)
+    params = train_dpi_params(x, y, steps=60 if args.smoke else 300)
     dpi = DpiService(params=params)
     rng = np.random.default_rng(1)
-    n = 256
+    n = 64 if args.smoke else 256
     full = np.stack([payload_with_embedded_malware(4096, 1.0, rng)
                      for _ in range(n)])
     part = np.stack([payload_with_embedded_malware(4096, 0.15, rng)
@@ -50,6 +61,23 @@ def main():
     emit("fig8_chain_without_dpi", us0, f"MBps={n*4096/us0:.1f}")
     emit("fig8_chain_with_dpi", us1,
          f"MBps={n*4096/us1:.1f};overhead={100*(us1-us0)/us0:.1f}%")
+
+    reg = tm.MetricRegistry()
+    reg.gauge("fig8/detect_full", det_full)
+    reg.gauge("fig8/detect_partial", det_part)
+    reg.gauge("fig8/false_positive", fp)
+    reg.gauge("fig8/chain_overhead_pct", 100 * (us1 - us0) / us0)
+    results = {"mode": "smoke" if args.smoke else "full",
+               "detect_full": round(det_full, 4),
+               "detect_partial": round(det_part, 4),
+               "false_positive": round(fp, 4),
+               "chain_without_dpi_us": round(us0, 1),
+               "chain_with_dpi_us": round(us1, 1),
+               "telemetry": reg.flat()}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

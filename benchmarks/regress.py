@@ -1,0 +1,164 @@
+"""Perf-regression gate: diff fresh bench smoke runs against the
+committed ``BENCH_*.json`` baselines and fail CI when a tick-based
+metric regresses beyond tolerance.
+
+Only *simulator-tick* metrics are compared (goodput per tick, ticks,
+retransmissions, drops, overlap) — never wall-clock.  The simulator is
+seeded and tick-deterministic, so these are stable across machines;
+the tolerance only absorbs intentional-but-small drift and the
+absolute slack keeps tiny counters (0 -> 1 retransmit) from flapping.
+
+Usage (what the CI bench-smoke job runs):
+
+    python -m benchmarks.regress \
+        --pair fig6  BENCH_fig6_multipath.json  fig6_smoke.json \
+        --pair fig10 BENCH_fig10_dlrm.json      fig10_smoke.json \
+        --pair fig11 BENCH_fig11_allreduce.json fig11_smoke.json
+
+Exit status 0 = no regression; 1 = at least one metric regressed (or a
+baseline/fresh pair was unreadable / mode-mismatched).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, Tuple
+
+# metric value + direction: "higher" = bigger is better (goodput),
+# "lower" = smaller is better (drops, retransmissions, ticks)
+Metrics = Dict[str, Tuple[float, str]]
+
+
+def extract_fig6(d: dict) -> Metrics:
+    out: Metrics = {}
+    for r in d.get("incast_cc", []):
+        k = f"incast_cc/{r['fan_in']}to1/{r['cc']}"
+        out[f"{k}/goodput_B_per_tick"] = (r["goodput_B_per_tick"], "higher")
+        out[f"{k}/tail_dropped"] = (r["tail_dropped"], "lower")
+        out[f"{k}/retransmissions"] = (r["retransmissions"], "lower")
+    for r in d.get("multipath", []):
+        k = (f"multipath/{r['fan_in']}to1/{r['rx_mode']}/"
+             f"{r['path_select']}/fail{r['fail_spine_at']}")
+        out[f"{k}/goodput_B_per_tick"] = (r["goodput_B_per_tick"], "higher")
+        out[f"{k}/retransmissions"] = (r["retransmissions"], "lower")
+        out[f"{k}/tail_dropped"] = (r["tail_dropped"], "lower")
+    t = d.get("traced_incast")
+    if t:
+        out["traced_incast/ticks"] = (t["ticks"], "lower")
+    return out
+
+
+def extract_fig10(d: dict) -> Metrics:
+    out: Metrics = {}
+    ing = d.get("ingest", {})
+    if "sync" in ing:
+        out["sync/goodput_B_per_tick"] = (ing["sync"]["goodput"], "higher")
+        out["sync/ticks"] = (ing["sync"]["ticks"], "lower")
+    for r, s in ing.get("streamed", {}).items():
+        out[f"streamed/{r}r/goodput_B_per_tick"] = (s["goodput"], "higher")
+        out[f"streamed/{r}r/overlap"] = (s["overlap"], "higher")
+        out[f"streamed/{r}r/ticks"] = (s["ticks"], "lower")
+    if "speedup_4r" in ing:
+        out["speedup_4r"] = (ing["speedup_4r"], "higher")
+    return out
+
+
+def extract_fig11(d: dict) -> Metrics:
+    out: Metrics = {}
+    for r in d.get("allreduce", []) + d.get("lossy", []):
+        k = (f"allreduce/{r['world']}n/{r['message_bytes']}B/{r['mode']}/"
+             f"{r['cc']}{'/lossy' if r.get('lossy') else ''}")
+        out[f"{k}/busbw_B_per_tick"] = (r["busbw_B_per_tick"], "higher")
+        out[f"{k}/ticks"] = (r["ticks"], "lower")
+        out[f"{k}/retransmissions"] = (r["retransmissions"], "lower")
+        out[f"{k}/tail_dropped"] = (r["tail_dropped"], "lower")
+    return out
+
+
+EXTRACTORS = {"fig6": extract_fig6, "fig10": extract_fig10,
+              "fig11": extract_fig11}
+
+
+def compare(fig: str, base: Metrics, fresh: Metrics, *,
+            tolerance: float, abs_slack: float) -> Tuple[list, list]:
+    """Returns ``(failures, lines)`` — human-readable report lines for
+    every shared metric, failure strings for the regressed ones."""
+    failures, lines = [], []
+    for key in sorted(base):
+        if key not in fresh:
+            failures.append(f"{fig}:{key}: metric missing from fresh run")
+            continue
+        b, direction = base[key]
+        f, _ = fresh[key]
+        if direction == "higher":
+            bad = f < b * (1 - tolerance) - abs_slack
+        else:
+            bad = f > b * (1 + tolerance) + abs_slack
+        mark = "REGRESSED" if bad else "ok"
+        lines.append(f"  [{mark:>9}] {key}: base={b} fresh={f} "
+                     f"({direction} is better)")
+        if bad:
+            failures.append(
+                f"{fig}:{key}: {f} vs baseline {b} "
+                f"({direction} is better, tolerance={tolerance:.0%} "
+                f"+{abs_slack} abs)")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--pair", nargs=3, action="append", required=True,
+                    metavar=("FIG", "BASELINE", "FRESH"),
+                    help="figure key (fig6|fig10|fig11), committed "
+                         "baseline JSON, fresh run JSON")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="relative tolerance (default 5%%)")
+    ap.add_argument("--abs-slack", type=float, default=2.0,
+                    help="absolute slack for small counters (default 2)")
+    args = ap.parse_args(argv)
+
+    all_failures = []
+    for fig, base_path, fresh_path in args.pair:
+        if fig not in EXTRACTORS:
+            print(f"error: unknown figure {fig!r} "
+                  f"(choose from {sorted(EXTRACTORS)})")
+            return 1
+        try:
+            with open(base_path) as f:
+                base_doc = json.load(f)
+            with open(fresh_path) as f:
+                fresh_doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            all_failures.append(f"{fig}: cannot load inputs: {e}")
+            continue
+        if base_doc.get("mode") != fresh_doc.get("mode"):
+            all_failures.append(
+                f"{fig}: mode mismatch (baseline "
+                f"{base_doc.get('mode')!r} vs fresh "
+                f"{fresh_doc.get('mode')!r}) — rerun with matching flags")
+            continue
+        base = EXTRACTORS[fig](base_doc)
+        fresh = EXTRACTORS[fig](fresh_doc)
+        if not base:
+            all_failures.append(f"{fig}: baseline has no metrics")
+            continue
+        failures, lines = compare(fig, base, fresh,
+                                  tolerance=args.tolerance,
+                                  abs_slack=args.abs_slack)
+        print(f"{fig}: {len(base)} baseline metrics, "
+              f"{len(failures)} regressed ({base_path} vs {fresh_path})")
+        print("\n".join(lines))
+        all_failures.extend(failures)
+
+    if all_failures:
+        print("\nPERF REGRESSION:")
+        for f in all_failures:
+            print(f"  {f}")
+        return 1
+    print("\nno perf regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

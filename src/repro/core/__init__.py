@@ -12,6 +12,10 @@ collectives              — ring/tree collectives over the verbs, with
                            the in-fabric reduction offload (the switch
                            folds CHUNK payloads at the hop; the ML-
                            fabric workload of the paper's §1 pitch)
+telemetry                — MetricRegistry (hierarchical typed metrics,
+                           every stats surface registers in) + the
+                           FlightRecorder tick-stamped event ring with
+                           Perfetto chrome://tracing export
 
 FPGA -> TPU design dual (the repo-wide translation rule): the FPGA
 realizes deep pipelines processing one beat per cycle with per-QP state

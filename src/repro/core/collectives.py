@@ -118,6 +118,10 @@ class CollectiveStats:
     transfers: int = 0           # _transfer barriers executed
     bytes_moved: int = 0         # payload bytes submitted to rdma_write
 
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``)."""
+        return dataclasses.asdict(self)
+
 
 class CollectiveGroup:
     """N ranks on one fabric, full-mesh connected, running ring/tree
@@ -148,6 +152,7 @@ class CollectiveGroup:
         self.offload = offload
         self.max_ticks = max_ticks
         self.stats = CollectiveStats()
+        self.recorder = None
         self._op_seq = 0
         # full QP mesh: _qpn[i][j] = rank i's QP toward rank j; writes on
         # it land in rank j's registered buffer for _qpn[j][i]
@@ -169,6 +174,24 @@ class CollectiveGroup:
                         self.service.register_qp(
                             nodes[i].node_id, nodes[j].node_id,
                             self._qpn[i][j])
+
+    # ------------------------------------------------------------ telemetry
+    def attach_recorder(self, rec):
+        """Wire a ``telemetry.FlightRecorder`` through the fabric and
+        every rank; collective barriers show up as ``coll_transfer``
+        spans on the group's track."""
+        self.recorder = rec
+        self.net.attach_recorder(rec)
+        for n in self.nodes:
+            n.attach_recorder(rec)
+
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``)."""
+        out = self.stats.snapshot()
+        out["world"] = self.world
+        if self.service is not None:
+            out["reducer"] = self.service.reducer.snapshot()
+        return out
 
     # ------------------------------------------------------------ plumbing
     def _recv_buf(self, rank: int, src: int) -> np.ndarray:
@@ -196,6 +219,10 @@ class CollectiveGroup:
         run_network(self.nodes, max_ticks=self.max_ticks)
         self.stats.ticks += self.net.now - t0
         self.stats.transfers += 1
+        if self.recorder is not None:
+            self.recorder.record(
+                t0, "coll_transfer", ("coll", f"world{self.world}"),
+                dur=self.net.now - t0, sends=len(sends))
         for (dst, src), want in expect.items():
             got = self.nodes[dst].check_completed(self._qpn[dst][src])
             if got < want:

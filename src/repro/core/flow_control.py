@@ -267,6 +267,15 @@ class DcqcnRateController:
             return True
         return False
 
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``)."""
+        return {"cnps_handled": self.cnps_handled,
+                "rate_cuts": self.rate_cuts,
+                "rate_increases": self.rate_increases,
+                "path_rate_cuts": self.path_rate_cuts,
+                "active_qps": len(self._active),
+                "n_paths": self.n_paths}
+
 
 class AckClockedFlowControl:
     """Per-QP outstanding-packet ledger with a pending queue.  With
@@ -350,6 +359,16 @@ class AckClockedFlowControl:
     def queue_depth(self, qpn: int) -> int:
         return len(self.pending[qpn])
 
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``)."""
+        snap = {"total_passed": self.total_passed,
+                "total_queued": self.total_queued,
+                "outstanding": sum(self.outstanding),
+                "pending": sum(len(q) for q in self.pending)}
+        if self.rate is not None:
+            snap["rate"] = self.rate.snapshot()
+        return snap
+
 
 @dataclasses.dataclass(frozen=True)
 class CreditLedger:
@@ -362,6 +381,10 @@ class CreditLedger:
     max_credits: int
     accepted: int            # payloads this QP's credits admitted
     dropped: int             # payloads dropped for want of a credit
+
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``)."""
+        return dataclasses.asdict(self)
 
 
 class CreditManager:
@@ -413,3 +436,11 @@ class CreditManager:
         add = min(n, self.max_credits - self.credits[qpn])
         self.credits[qpn] += add
         self.granted += add
+
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``)."""
+        return {"accepted": self.accepted,
+                "dropped_no_credit": self.dropped_no_credit,
+                "granted": self.granted,
+                "available": sum(self.credits),
+                "max_credits": self.max_credits}

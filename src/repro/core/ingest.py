@@ -142,6 +142,19 @@ class StreamReport:
         """Per-stripe RX credit ledgers (stripe id -> ledger view)."""
         return {s.sid: s.ledger for s in self.stripes if s.ledger}
 
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``)."""
+        return {"index": self.index, "nbytes": self.nbytes,
+                "ticks": self.ticks,
+                "transport_done_tick": self.transport_done_tick,
+                "tiles": self.tiles,
+                "tiles_overlapped": self.tiles_overlapped,
+                "refetches": self.refetches,
+                "goodput_bytes_per_tick": self.goodput_bytes_per_tick,
+                "overlap_efficiency": self.overlap_efficiency,
+                "stripes": {s.sid: s.ledger.snapshot()
+                            for s in self.stripes if s.ledger}}
+
 
 class DisaggregatedStorage:
     """A remote storage node: shards live in its registered buffers."""
@@ -302,6 +315,7 @@ class BalboaIngest:
         self.shardings = shardings
         self.tile_to_batch = tile_to_batch
         self.refetches = 0
+        self.recorder = None
         self._qp_epoch: Dict[int, int] = {}    # qpn_l -> failover epoch
         # payload bytes that crossed a host-side decode copy (legacy
         # plane only; the streaming plane keeps this at 0 — test-enforced)
@@ -310,6 +324,29 @@ class BalboaIngest:
         self._tile_dtypes: Optional[Dict[str, np.dtype]] = None
 
     _EPOCH_PSN_STRIDE = 1 << 16
+
+    # ------------------------------------------------------- telemetry
+    def attach_recorder(self, rec):
+        """Wire a ``telemetry.FlightRecorder`` through the whole ingest
+        stack: fabric hops, trainer/storage QP events, and the stream
+        lifecycle (issue/tile/done/refetch) on per-stripe tracks."""
+        self.recorder = rec
+        self.net.attach_recorder(rec)
+        self.trainer.attach_recorder(rec)
+        for s in self.storage:
+            s.node.attach_recorder(rec)
+
+    def _rec(self, kind: str, sid: int, **attrs):
+        if self.recorder is not None:
+            self.recorder.record(self.net.now, kind, ("stripe", sid),
+                                 **attrs)
+
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``)."""
+        return {"refetches": self.refetches,
+                "host_payload_bytes": self.host_payload_bytes,
+                "n_qps": len(self.qps),
+                "n_storage_nodes": len(self.storage)}
 
     def _failover_reestablish(self, qp: QpRef):
         """Tear down BOTH ends of the pair and restart them in a fresh
@@ -399,6 +436,8 @@ class BalboaIngest:
             stripe.attempts += (qp.node,)
             active[qp_idx] = stripe
             events.append(("issue", rel(), stripe.sid, qp.node))
+            self._rec("stream_issue", stripe.sid, node=qp.node,
+                      resume=stripe.resume)
 
         def pick_qp(stripe: Stripe) -> Optional[int]:
             for qp_idx, qp in enumerate(self.qps):
@@ -449,6 +488,8 @@ class BalboaIngest:
                                      -(-(hi - lo) // mtu))
                     events.append(("tile", rel(), stripe.sid,
                                    stripe.tiles_emitted))
+                    self._rec("stream_tile", stripe.sid,
+                              tile=stripe.tiles_emitted)
                     stripe.tiles_emitted += 1
                     tiles_total += 1
                 if stripe.watermark >= stripe.nbytes:
@@ -456,6 +497,8 @@ class BalboaIngest:
                     stripe.ledger = self.trainer.credits.ledger(qp.qpn_l)
                     del active[qp_idx]
                     events.append(("done", rel(), stripe.sid))
+                    self._rec("stream_done", stripe.sid,
+                              tiles=stripe.tiles_emitted)
                     continue
                 stalled = (self.net.now - stripe.progress_tick) > stall
                 if self.trainer.qp_error(qp.qpn_l) or stalled:
@@ -467,6 +510,8 @@ class BalboaIngest:
                     del active[qp_idx]
                     events.append(("refetch", rel(), stripe.sid,
                                    stripe.node))
+                    self._rec("stream_refetch", stripe.sid,
+                              node=stripe.node)
                     if len(set(stripe.attempts)) >= len(self.storage):
                         raise RuntimeError(
                             f"shard {index} stripe {stripe.sid}: "

@@ -80,12 +80,17 @@ class Link:
         self._seq = 0
         self.sent = 0
         self.dropped = 0
+        self.on_event = None     # flight-recorder hook: (kind, packet)
 
     def send(self, p: pk.Packet, now: int):
         self.sent += 1
         if self.rng.random() < self.cfg.loss_prob:
             self.dropped += 1
+            if self.on_event is not None:
+                self.on_event("wire_drop", p)
             return
+        if self.on_event is not None:
+            self.on_event("inject", p)
         delay = self.cfg.latency_ticks
         if self.cfg.jitter_ticks:
             delay += int(self.rng.integers(0, self.cfg.jitter_ticks + 1))
@@ -119,6 +124,7 @@ class Network:
                     c = dataclasses.replace(cfg, seed=cfg.seed * 1000 + a * 37 + b)
                     self.links[(a, b)] = Link(c)
         self.now = 0
+        self.recorder = None
 
     def send(self, src: int, dst: int, p: pk.Packet):
         self.links[(src, dst)].send(p, self.now)
@@ -130,6 +136,27 @@ class Network:
 
     def quiescent(self) -> bool:
         return all(l.in_flight == 0 for l in self.links.values())
+
+    # ---- telemetry ----------------------------------------------------
+    def attach_recorder(self, rec):
+        """Record per-link inject / wire_drop lifecycle events into a
+        ``telemetry.FlightRecorder`` (track per directed link)."""
+        self.recorder = rec
+
+        def hook(track):
+            def on_event(kind, p):
+                rec.record(self.now, kind, track, qpn=p.qpn, psn=p.psn)
+            return on_event
+
+        for (a, b), link in self.links.items():
+            link.on_event = hook(("link", f"{a}->{b}"))
+
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``)."""
+        return {"now": self.now,
+                "injected": sum(l.sent for l in self.links.values()),
+                "wire_dropped": sum(l.dropped for l in self.links.values()),
+                "in_flight": sum(l.in_flight for l in self.links.values())}
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +256,18 @@ class SwitchReducer:
         """Held carrier packets (awaiting completion or in-order
         release) — in-flight work the fabric must not call quiescent."""
         return sum(s.carrier is not None for s in self._slots.values())
+
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``)."""
+        return {"absorbed": self.absorbed,
+                "acks_synthesized": self.acks_synthesized,
+                "naks_synthesized": self.naks_synthesized,
+                "reduced_forwarded": self.reduced_forwarded,
+                "dup_dropped": self.dup_dropped,
+                "refills": self.refills,
+                "peak_slots": self.peak_slots,
+                "bytes_reduced": self.bytes_reduced,
+                "in_flight": self.in_flight}
 
     # ---- datapath ----------------------------------------------------
     def on_packet(self, dst: int, p: pk.Packet
@@ -380,6 +419,21 @@ class PortStats:
     ecn_marked: int = 0          # CE marks applied at this egress queue
     max_depth: int = 0           # high-water mark of the egress queue
 
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``)."""
+        return dataclasses.asdict(self)
+
+
+def sum_port_stats(stats) -> dict:
+    """Aggregate any iterable of ``PortStats`` field-wise (``max_depth``
+    takes the max) — the one helper behind every fabric-level total."""
+    out = {f.name: 0 for f in dataclasses.fields(PortStats)}
+    for s in stats:
+        for k in out:
+            v = getattr(s, k)
+            out[k] = max(out[k], v) if k == "max_depth" else out[k] + v
+    return out
+
 
 def _red_mark(rng: np.random.Generator, depth: int,
               kmin: int, kmax: int, pmax: float) -> bool:
@@ -410,6 +464,10 @@ class _EgressQueue:
         self.bandwidth = bandwidth
         self.stats = stats
         self._q: Deque[Tuple[pk.Packet, object]] = collections.deque()
+        # flight-recorder hook: (kind, packet, depth-after).  Installed
+        # by the owning fabric's ``attach_recorder``; one ``is None``
+        # test per queue operation when no recorder is attached.
+        self.on_event = None
 
     def __len__(self) -> int:
         return len(self._q)
@@ -418,10 +476,14 @@ class _EgressQueue:
         """Drop-tail admission."""
         if len(self._q) >= self.capacity:
             self.stats.tail_dropped += 1
+            if self.on_event is not None:
+                self.on_event("tail_drop", p, len(self._q))
             return False
         self._q.append((p, meta))
         self.stats.enqueued += 1
         self.stats.max_depth = max(self.stats.max_depth, len(self._q))
+        if self.on_event is not None:
+            self.on_event("enqueue", p, len(self._q))
         return True
 
     def drain(self, mark) -> List[Tuple[pk.Packet, object]]:
@@ -435,7 +497,11 @@ class _EgressQueue:
             if mark(len(self._q)):
                 self._q[0][0].ecn = True
                 self.stats.ecn_marked += 1
+                if self.on_event is not None:
+                    self.on_event("ecn", self._q[0][0], len(self._q))
             batch.append(self._q.popleft())
+            if self.on_event is not None:
+                self.on_event("dequeue", batch[-1][0], len(self._q))
         self.stats.delivered += len(batch)
         return batch
 
@@ -443,8 +509,23 @@ class _EgressQueue:
         """Discard everything queued (link/spine failure); returns the
         number of packets lost."""
         n = len(self._q)
+        if self.on_event is not None:
+            for i, (p, _meta) in enumerate(self._q):
+                self.on_event("flush", p, n - 1 - i)
         self._q.clear()
         return n
+
+
+def _queue_hook(fabric, rec, track):
+    """Build an ``_EgressQueue.on_event`` closure recording lifecycle
+    events on ``track`` at the owning fabric's current tick; enqueue /
+    dequeue additionally emit a ``qdepth`` sample so Perfetto renders a
+    queue-depth counter graph per port/uplink/downlink."""
+    def on_event(kind, p, depth):
+        rec.record(fabric.now, kind, track, qpn=p.qpn, psn=p.psn)
+        if kind in ("enqueue", "dequeue"):
+            rec.record(fabric.now, "qdepth", track, depth=depth)
+    return on_event
 
 
 class SwitchedFabric:
@@ -475,6 +556,8 @@ class SwitchedFabric:
             _EgressQueue(cfg.queue_capacity, self.bandwidth[i],
                          self.port_stats[i]) for i in range(n_nodes)]
         self.reducer: Optional[SwitchReducer] = None
+        self.recorder = None
+        self.injected = 0        # send() calls (conservation anchor)
 
     def attach_reducer(self, reducer: SwitchReducer):
         """Install the in-fabric reduction offload (collective control
@@ -490,10 +573,17 @@ class SwitchedFabric:
         self.reducer = reducer
 
     def send(self, src: int, dst: int, p: pk.Packet):
+        self.injected += 1
         st = self.port_stats[dst]
         if self.cfg.loss_prob and self.rng.random() < self.cfg.loss_prob:
             st.wire_dropped += 1
+            if self.recorder is not None:
+                self.recorder.record(self.now, "wire_drop", ("node", src),
+                                     qpn=p.qpn, psn=p.psn, dst=dst)
             return
+        if self.recorder is not None:
+            self.recorder.record(self.now, "inject", ("node", src),
+                                 qpn=p.qpn, psn=p.psn, dst=dst)
         self._seq += 1
         heapq.heappush(self._wire,
                        (self.now + self.delay[src], self._seq, dst, p))
@@ -534,17 +624,40 @@ class SwitchedFabric:
                 and (self.reducer is None or self.reducer.in_flight == 0))
 
     # ---- telemetry ----------------------------------------------------
+    def attach_recorder(self, rec):
+        """Record packet lifecycle events (inject, per-port enqueue /
+        dequeue with queue depth, ECN mark, drops) into a
+        ``telemetry.FlightRecorder``; one track per port."""
+        self.recorder = rec
+        for i, q in enumerate(self.egress):
+            q.on_event = _queue_hook(self, rec, ("port", i))
+
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``):
+        conservation holds as ``injected == wire_dropped + tail_dropped
+        + delivered + in_flight`` (absent a reducer, which consumes
+        contributions and synthesizes new packets at the hop)."""
+        snap = {"now": self.now, "injected": self.injected,
+                "in_flight": (len(self._wire)
+                              + sum(len(q) for q in self.egress)),
+                **sum_port_stats(self.port_stats),
+                "ports": {i: s.snapshot()
+                          for i, s in enumerate(self.port_stats)}}
+        if self.reducer is not None:
+            snap["reducer"] = self.reducer.snapshot()
+        return snap
+
     @property
     def total_tail_dropped(self) -> int:
-        return sum(s.tail_dropped for s in self.port_stats)
+        return sum_port_stats(self.port_stats)["tail_dropped"]
 
     @property
     def total_delivered(self) -> int:
-        return sum(s.delivered for s in self.port_stats)
+        return sum_port_stats(self.port_stats)["delivered"]
 
     @property
     def total_ecn_marked(self) -> int:
-        return sum(s.ecn_marked for s in self.port_stats)
+        return sum_port_stats(self.port_stats)["ecn_marked"]
 
 
 def dcqcn_fabric_profile() -> FabricConfig:
@@ -667,6 +780,8 @@ class ClosFabric:
         self.spine_pkts = [0] * self.n_spines   # packets forwarded via spine
         self.failure_dropped = 0                # lost to fail_spine()
         self.rerouted = 0                       # stamped path dead, re-picked
+        self.injected = 0                       # send() calls
+        self.recorder = None
 
     # ---- topology helpers ---------------------------------------------
     def leaf_of(self, node: int) -> int:
@@ -683,10 +798,17 @@ class ClosFabric:
 
     # ---- datapath ------------------------------------------------------
     def send(self, src: int, dst: int, p: pk.Packet):
+        self.injected += 1
         st = self.port_stats[dst]
         if self.cfg.loss_prob and self.rng.random() < self.cfg.loss_prob:
             st.wire_dropped += 1
+            if self.recorder is not None:
+                self.recorder.record(self.now, "wire_drop", ("node", src),
+                                     qpn=p.qpn, psn=p.psn, dst=dst)
             return
+        if self.recorder is not None:
+            self.recorder.record(self.now, "inject", ("node", src),
+                                 qpn=p.qpn, psn=p.psn, dst=dst)
         self._seq += 1
         if self.leaf_of(src) == self.leaf_of(dst):
             p.path_id = -1                  # no spine crossed
@@ -707,6 +829,9 @@ class ClosFabric:
             if pid in alive:
                 return pid                  # honor the sender's stamp
             self.rerouted += 1              # stamped plane is dead: re-pick
+            if self.recorder is not None:
+                self.recorder.record(self.now, "reroute", ("spine", pid),
+                                     qpn=p.qpn, psn=p.psn)
         if self.cfg.path_mode == "spray":
             c = self._rr.get(src, 0)
             self._rr[src] = c + 1
@@ -782,6 +907,9 @@ class ClosFabric:
         heapq.heapify(keep)
         self._wire = keep
         self.failure_dropped += dropped
+        if self.recorder is not None:
+            self.recorder.record(self.now, "spine_fail", ("spine", s),
+                                 dropped=dropped)
         return dropped
 
     def quiescent(self) -> bool:
@@ -791,25 +919,65 @@ class ClosFabric:
                 and all(not len(q) for row in self.spdown for q in row))
 
     # ---- telemetry -----------------------------------------------------
+    def attach_recorder(self, rec):
+        """Record packet lifecycle events across every stage — node
+        ports, leaf uplinks, spine downlinks — into a
+        ``telemetry.FlightRecorder``: one track per port, per
+        leaf->spine uplink and per spine->leaf downlink, so an incast
+        or a spine failure is visually debuggable in Perfetto."""
+        self.recorder = rec
+        for i, q in enumerate(self.down):
+            q.on_event = _queue_hook(self, rec, ("port", i))
+        for lf in range(self.n_leaves):
+            for s in range(self.n_spines):
+                self.up[lf][s].on_event = _queue_hook(
+                    self, rec, ("uplink", f"leaf{lf}->spine{s}"))
+        for s in range(self.n_spines):
+            for lf in range(self.n_leaves):
+                self.spdown[s][lf].on_event = _queue_hook(
+                    self, rec, ("spdown", f"spine{s}->leaf{lf}"))
+
+    def snapshot(self) -> dict:
+        """Common telemetry shape.  Conservation: ``injected ==
+        ports/wire_dropped + tail_dropped(all stages) + failure_dropped
+        + ports/delivered + in_flight``."""
+        up_flat = [s for row in self.uplink_stats for s in row]
+        sp_flat = [s for row in self.spine_stats for s in row]
+        return {"now": self.now, "injected": self.injected,
+                "failure_dropped": self.failure_dropped,
+                "rerouted": self.rerouted,
+                "alive_spines": len(self._alive),
+                "spine_pkts": list(self.spine_pkts),
+                "in_flight": (len(self._wire)
+                              + sum(len(q) for q in self.down)
+                              + sum(len(q) for row in self.up for q in row)
+                              + sum(len(q) for row in self.spdown
+                                    for q in row)),
+                "ports": {**sum_port_stats(self.port_stats),
+                          **{i: s.snapshot()
+                             for i, s in enumerate(self.port_stats)}},
+                "uplinks": sum_port_stats(up_flat),
+                "spine_down": sum_port_stats(sp_flat)}
+
     @property
     def total_tail_dropped(self) -> int:
-        return (sum(s.tail_dropped for s in self.port_stats)
-                + sum(s.tail_dropped for row in self.uplink_stats
-                      for s in row)
-                + sum(s.tail_dropped for row in self.spine_stats
-                      for s in row))
+        return (sum_port_stats(self.port_stats)["tail_dropped"]
+                + sum_port_stats(s for row in self.uplink_stats
+                                 for s in row)["tail_dropped"]
+                + sum_port_stats(s for row in self.spine_stats
+                                 for s in row)["tail_dropped"])
 
     @property
     def total_delivered(self) -> int:
-        return sum(s.delivered for s in self.port_stats)
+        return sum_port_stats(self.port_stats)["delivered"]
 
     @property
     def total_ecn_marked(self) -> int:
-        return (sum(s.ecn_marked for s in self.port_stats)
-                + sum(s.ecn_marked for row in self.uplink_stats
-                      for s in row)
-                + sum(s.ecn_marked for row in self.spine_stats
-                      for s in row))
+        return (sum_port_stats(self.port_stats)["ecn_marked"]
+                + sum_port_stats(s for row in self.uplink_stats
+                                 for s in row)["ecn_marked"]
+                + sum_port_stats(s for row in self.spine_stats
+                                 for s in row)["ecn_marked"])
 
 
 @dataclasses.dataclass
@@ -826,7 +994,8 @@ def incast_scenario(n_senders: int, *, message_bytes: int = 65536,
                     rx_credits: int = 64, fc_window: int = 16,
                     max_ticks: int = 300_000,
                     engine: str = "batched",
-                    congestion_control: str = "ack_clocked") -> IncastResult:
+                    congestion_control: str = "ack_clocked",
+                    recorder=None) -> IncastResult:
     """The canonical congestion scenario: ``n_senders`` nodes RDMA-WRITE
     simultaneously into one receiver through a shallow-buffered switch
     port.  Runs until the fabric drains — callers assert delivery and
@@ -857,6 +1026,10 @@ def incast_scenario(n_senders: int, *, message_bytes: int = 65536,
     senders = [RdmaNode(i + 1, fabric, fc_window=fc_window, engine=engine,
                         congestion_control=congestion_control, dcqcn=dcqcn)
                for i in range(n_senders)]
+    if recorder is not None:
+        fabric.attach_recorder(recorder)
+        for n in [recv] + senders:
+            n.attach_recorder(recorder)
     rng = np.random.default_rng(13)
     work = []
     for s in senders:
@@ -879,7 +1052,8 @@ def clos_incast_scenario(n_senders: int, *, message_bytes: int = 65536,
                          engine: str = "batched",
                          congestion_control: str = "ack_clocked",
                          fail_spine_at: Optional[int] = None,
-                         fail_spine: int = 0) -> IncastResult:
+                         fail_spine: int = 0,
+                         recorder=None) -> IncastResult:
     """The multipath congestion scenario: ``n_senders`` nodes (one per
     leaf) RDMA-WRITE simultaneously into node 0 across a leaf-spine
     fabric with asymmetric spine delays.  With ``path_select="spray"``
@@ -906,6 +1080,10 @@ def clos_incast_scenario(n_senders: int, *, message_bytes: int = 65536,
                         congestion_control=congestion_control,
                         dcqcn=dcqcn, **kw)
                for i in range(n_senders)]
+    if recorder is not None:
+        fabric.attach_recorder(recorder)
+        for n in [recv] + senders:
+            n.attach_recorder(recorder)
     rng = np.random.default_rng(13)
     work = []
     for s in senders:

@@ -69,6 +69,16 @@ class RxTables(NamedTuple):
     rkey: jax.Array        # (Q,) int32   registered buffer's rkey (read-only)
     rxbit: jax.Array       # (Q,) int32   SR bitmap: bit k = epsn+k received
     sr: jax.Array          # (Q,) int32   1 = selective-repeat RX mode
+    # telemetry counters (monotonic, per QP).  They ride the carried
+    # state exactly like the protocol fields — updated in-graph by
+    # ``_rx_decide`` in both engines, harvested on the host only at
+    # epoch boundaries (RdmaNode.engine_counters), so observability adds
+    # zero host round-trips to a jitted epoch.
+    acc_cnt: jax.Array     # (Q,) int32   payloads accepted (DMA'd)
+    dup_cnt: jax.Array     # (Q,) int32   duplicates dropped (re-ACKed)
+    ooo_cnt: jax.Array     # (Q,) int32   out-of-order drops (NAKed)
+    cdrop_cnt: jax.Array   # (Q,) int32   credit drops
+    ecn_tot: jax.Array     # (Q,) int32   CE-marked payload arrivals
 
 
 class RxResult(NamedTuple):
@@ -188,6 +198,7 @@ def _rx_decide(state: Dict[str, jax.Array], p: Dict[str, jax.Array]
         jnp.where(accept, state["bytes_left"] - plen, state["bytes_left"]))
     new_msn = jnp.where(accept & is_last, state["msn"] + 1, state["msn"])
     new_credits = jnp.where(accept, credits - 1, credits)
+    ecn_echo = (p["ecn"] > 0) & is_payload & valid
 
     new_state = {
         "epsn": new_epsn.astype(jnp.int32),
@@ -198,6 +209,16 @@ def _rx_decide(state: Dict[str, jax.Array], p: Dict[str, jax.Array]
         "rkey": state["rkey"],
         "rxbit": new_rxbit.astype(jnp.int32),
         "sr": state["sr"],
+        # telemetry counters.  dup/ooo need the explicit ``valid`` gate:
+        # unlike accept/credit-drop they never touch protocol state, so
+        # the GBN FSM leaves them ungated for padding lanes (the batched
+        # engine zeroes invalid lanes' *outputs* post-hoc, but counter
+        # state must match the never-processed treatment bit-for-bit)
+        "acc_cnt": state["acc_cnt"] + accept.astype(jnp.int32),
+        "dup_cnt": state["dup_cnt"] + (dup & valid).astype(jnp.int32),
+        "ooo_cnt": state["ooo_cnt"] + (ooo & valid).astype(jnp.int32),
+        "cdrop_cnt": state["cdrop_cnt"] + dropped_credit.astype(jnp.int32),
+        "ecn_tot": state["ecn_tot"] + ecn_echo.astype(jnp.int32),
     }
     out = {
         "accept": accept, "dup": dup, "ooo": ooo,
@@ -223,7 +244,7 @@ def _rx_decide(state: Dict[str, jax.Array], p: Dict[str, jax.Array]
         # is congestion evidence regardless of the PSN verdict — dups and
         # credit-dropped packets crossed the congested queue too — so the
         # echo is stateless: every valid CE-marked payload packet counts.
-        "ecn_echo": (p["ecn"] > 0) & is_payload & valid,
+        "ecn_echo": ecn_echo,
     }
     return new_state, out
 
@@ -231,7 +252,10 @@ def _rx_decide(state: Dict[str, jax.Array], p: Dict[str, jax.Array]
 _PKT_FIELDS = ("qpn", "opcode", "psn", "plen", "vaddr", "dma_len", "ack_req",
                "ecn", "rkey", "valid")
 _STATE_FIELDS = ("epsn", "msn", "bytes_left", "cur_vaddr", "credits", "rkey",
-                 "rxbit", "sr")
+                 "rxbit", "sr",
+                 "acc_cnt", "dup_cnt", "ooo_cnt", "cdrop_cnt", "ecn_tot")
+# the counter subset, exposed for epoch-boundary harvesting
+COUNTER_FIELDS = ("acc_cnt", "dup_cnt", "ooo_cnt", "cdrop_cnt", "ecn_tot")
 
 
 def _rx_one(tables: RxTables, p) -> Tuple[RxTables, Dict]:
@@ -497,6 +521,11 @@ def make_rx_tables(n_qps: int, initial_credits: int = 64) -> RxTables:
         rkey=jnp.zeros(n_qps, jnp.int32),
         rxbit=jnp.zeros(n_qps, jnp.int32),
         sr=jnp.zeros(n_qps, jnp.int32),
+        acc_cnt=jnp.zeros(n_qps, jnp.int32),
+        dup_cnt=jnp.zeros(n_qps, jnp.int32),
+        ooo_cnt=jnp.zeros(n_qps, jnp.int32),
+        cdrop_cnt=jnp.zeros(n_qps, jnp.int32),
+        ecn_tot=jnp.zeros(n_qps, jnp.int32),
     )
 
 

@@ -63,6 +63,21 @@ class NodeStats:
     nak_prot_rx: int = 0         # protection NAKs received (requester side)
     sacked: int = 0              # slots released by selective ACK bitmaps
 
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``)."""
+        return dataclasses.asdict(self)
+
+
+# jitted-engine counter column -> the host-side NodeStats counter it
+# mirrors (the reconciliation tests assert per-column sums match)
+ENGINE_COUNTERS = {
+    "acc_cnt": "accepted",
+    "dup_cnt": "dup_dropped",
+    "ooo_cnt": "ooo_nak",
+    "cdrop_cnt": "credit_dropped",
+    "ecn_tot": "ecn_marked_rx",
+}
+
 
 CONGESTION_CONTROLS = ("ack_clocked", "static", "dcqcn")
 RX_MODES = ("go_back_n", "selective_repeat")
@@ -127,6 +142,7 @@ class RdmaNode:
         self.services = services
         self.sniffer = sniffer
         self.stats = NodeStats()
+        self.recorder = None                 # telemetry.FlightRecorder
         self.qp_errors: set = set()                  # QPs dead on retry budget
         self._fatal_qps: set = set()                 # protection errors: never
                                                      # retransmit, only recover
@@ -160,6 +176,40 @@ class RdmaNode:
         self._sr_pending_last: Dict[int, List[int]] = {}
         self._last_gap_resend: Dict[int, int] = {}   # qpn -> tick
         self._path_rr: Dict[int, int] = {}           # qpn -> spray cursor
+
+    # --------------------------------------------------------- telemetry
+    def attach_recorder(self, rec):
+        """Record transport lifecycle events (retransmit, SACK/NAK, CNP
+        tx/rx, completion, QP error) into a ``telemetry.FlightRecorder``
+        — one track per (node, QP)."""
+        self.recorder = rec
+
+    def _rec(self, kind: str, qpn: int, **attrs):
+        if self.recorder is not None:
+            self.recorder.record(self.net.now, kind,
+                                 ("qp", f"{self.node_id}:{qpn}"), **attrs)
+
+    def engine_counters(self) -> Dict[str, np.ndarray]:
+        """Harvest the per-QP counter columns carried through the jitted
+        RX engine state (``pipeline.COUNTER_FIELDS``).  This is the ONE
+        host sync observability costs, and it happens here — at an epoch
+        boundary, when a registry snapshot asks — never inside the
+        per-batch engine calls."""
+        return {host: np.asarray(getattr(self.rx_tables, col))
+                for col, host in ENGINE_COUNTERS.items()}
+
+    def engine_totals(self) -> Dict[str, int]:
+        return {k: int(v.sum()) for k, v in self.engine_counters().items()}
+
+    def snapshot(self) -> dict:
+        """Common telemetry shape: every stats surface of the node."""
+        return {"stats": self.stats.snapshot(),
+                "engine": self.engine_totals(),
+                "fc": self.fc.snapshot(),
+                "credits": self.credits.snapshot(),
+                "retx": self.retx.snapshot(),
+                "completions": sum(self._completions.values()),
+                "qp_errors": len(self.qp_errors)}
 
     # ------------------------------------------------------------- verbs
     def init_rdma(self, max_size: int, remote: "RdmaNode",
@@ -433,6 +483,7 @@ class RdmaNode:
                     else:
                         self._completions[qpn] = \
                             self._completions.get(qpn, 0) + 1
+                        self._rec("completion", qpn, psn=p.psn)
             elif res["dup"][i]:
                 self.stats.dup_dropped += 1
                 self._send_ctrl(qpn, pk.make_ack(self._remote_qpn(qpn),
@@ -449,6 +500,8 @@ class RdmaNode:
                     self._remote_qpn(qpn), p.psn))
             elif res["ooo"][i]:
                 self.stats.ooo_nak += 1
+                self._rec("nak", qpn, psn=p.psn,
+                          expected=int(res["ack_psn"][i]) + 1)
                 self._send_ctrl(qpn, pk.make_ack(self._remote_qpn(qpn),
                                                  int(res["ack_psn"][i]),
                                                  nak=True))
@@ -492,6 +545,8 @@ class RdmaNode:
                 continue
             self._completions[qpn] = self._completions.get(qpn, 0) \
                 + len(done)
+            for ps in done:
+                self._rec("completion", qpn, psn=ps)
             rest = [ps for ps in lst
                     if ((ps - epsn) % span) <= pk.PSN_MASK // 2]
             if rest:
@@ -506,6 +561,8 @@ class RdmaNode:
             sacked = self.retx.sack_release(qpn, p.ack_psn, p.sack_bits)
             self.stats.sacked += sacked
             released += sacked
+            if sacked:
+                self._rec("sack", qpn, released=sacked, ack_psn=p.ack_psn)
             self._maybe_gap_resend(qpn, p)
         for passed in self.fc.ack(qpn, max(released, 1)):
             self._dispatch(qpn, passed[1])
@@ -545,6 +602,7 @@ class RdmaNode:
                 continue
             self._last_cnp_sent[qpn] = self.net.now
             self.stats.cnp_tx += 1
+            self._rec("cnp_tx", qpn, marks=int(ecn_cnt[qpn]))
             path = ce_path.get(qpn, -1) if ce_path else -1
             self._send_ctrl(qpn, pk.make_cnp(self._remote_qpn(qpn),
                                              src_ip=self.node_id,
@@ -556,6 +614,7 @@ class RdmaNode:
         ACK-clocked budget (go-back-N state is untouched)."""
         qpn = self._local_qpn(p.qpn)
         self.stats.cnp_rx += 1
+        self._rec("cnp_rx", qpn, path=p.path_id)
         self.fc.on_cnp(qpn, self.net.now, path=p.path_id)
 
     NAK_HOLDOFF = 8      # ticks: rate-limit go-back-N resend bursts
@@ -591,6 +650,7 @@ class RdmaNode:
             return       # fatal QP: hold fire until re-established
         if self.fc.rate is None:
             self.stats.retransmissions += 1
+            self._rec("retransmit", qpn, psn=rp.psn)
             self._send(qpn, rp)
             return
         staged = self._retx_staged.setdefault(qpn, [])
@@ -608,6 +668,7 @@ class RdmaNode:
             q = self._retx_staged[qpn]
             while q and rate.take(qpn, 1):
                 self.stats.retransmissions += 1
+                self._rec("retransmit", qpn, psn=q[0].psn)
                 self._send(qpn, q.pop(0))
         self._retx_staged = {q: v for q, v in self._retx_staged.items() if v}
 
@@ -644,8 +705,10 @@ class RdmaNode:
         # retransmitting forever (upper layers re-establish or fail over)
         exhausted = self.retx.exhausted
         while self._exhausted_seen < len(exhausted):
-            qpn, _psn = exhausted[self._exhausted_seen]
+            qpn, psn = exhausted[self._exhausted_seen]
             self._exhausted_seen += 1
+            if qpn not in self.qp_errors:
+                self._rec("qp_error", qpn, psn=psn)
             self.qp_errors.add(qpn)
 
     def qp_error(self, qpn: int) -> bool:

@@ -150,3 +150,9 @@ class RetransmissionBuffer:
 
     def outstanding(self, qpn: int) -> int:
         return len(self.slots.get(qpn, {}))
+
+    def snapshot(self) -> dict:
+        """Common telemetry shape (see ``telemetry.MetricRegistry``)."""
+        return {"retransmissions": self.retransmissions,
+                "exhausted": len(self.exhausted),
+                "held": sum(len(q) for q in self.slots.values())}

@@ -16,7 +16,6 @@ same PCAP byte format.
 from __future__ import annotations
 
 import struct
-import time
 from typing import List, Optional
 
 from repro.core import packet as pk

@@ -1,0 +1,109 @@
+"""Perf-regression gate tests: ``benchmarks/regress.py`` must pass on
+the committed baselines and fail on synthetically degraded results —
+the property the CI gating step relies on.
+"""
+import copy
+import json
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+from benchmarks import regress                       # noqa: E402
+
+BASELINES = {
+    "fig6": ROOT / "BENCH_fig6_multipath.json",
+    "fig10": ROOT / "BENCH_fig10_dlrm.json",
+    "fig11": ROOT / "BENCH_fig11_allreduce.json",
+}
+
+
+def _load(fig):
+    with open(BASELINES[fig]) as f:
+        return json.load(f)
+
+
+def test_baselines_committed_and_extractable():
+    for fig, path in BASELINES.items():
+        assert path.exists(), f"missing committed baseline {path.name}"
+        metrics = regress.EXTRACTORS[fig](_load(fig))
+        assert metrics, f"{fig}: extractor found no metrics"
+        for key, (val, direction) in metrics.items():
+            assert direction in ("higher", "lower"), key
+            assert isinstance(val, (int, float)), key
+            # tick-based metrics only: no wall-clock leaks into the gate
+            assert "wall" not in key and "_us" not in key, (
+                f"{fig}:{key} looks wall-clock-based")
+
+
+def test_regress_passes_on_identical(capsys):
+    args = []
+    for fig, path in BASELINES.items():
+        args += ["--pair", fig, str(path), str(path)]
+    assert regress.main(args) == 0
+    assert "no perf regressions" in capsys.readouterr().out
+
+
+def _degrade(doc):
+    bad = copy.deepcopy(doc)
+    for r in bad.get("incast_cc", []):
+        r["goodput_B_per_tick"] *= 0.5
+        r["retransmissions"] += 100
+    for r in bad.get("multipath", []):
+        r["goodput_B_per_tick"] *= 0.5
+    return bad
+
+
+def test_regress_fails_on_degraded(tmp_path, capsys):
+    bad_path = tmp_path / "fig6_bad.json"
+    bad_path.write_text(json.dumps(_degrade(_load("fig6"))))
+    rc = regress.main(["--pair", "fig6", str(BASELINES["fig6"]),
+                       str(bad_path)])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "PERF REGRESSION" in out and "REGRESSED" in out
+
+
+def test_regress_within_tolerance_passes(tmp_path):
+    doc = _load("fig6")
+    near = copy.deepcopy(doc)
+    for r in near.get("incast_cc", []):
+        r["goodput_B_per_tick"] *= 0.97        # 3% < 5% tolerance
+    near_path = tmp_path / "fig6_near.json"
+    near_path.write_text(json.dumps(near))
+    assert regress.main(["--pair", "fig6", str(BASELINES["fig6"]),
+                         str(near_path)]) == 0
+
+
+def test_regress_flags_missing_metric(tmp_path):
+    doc = _load("fig11")
+    trimmed = copy.deepcopy(doc)
+    trimmed["allreduce"] = trimmed["allreduce"][:-1]
+    p = tmp_path / "fig11_trim.json"
+    p.write_text(json.dumps(trimmed))
+    assert regress.main(["--pair", "fig11", str(BASELINES["fig11"]),
+                         str(p)]) == 1
+
+
+def test_regress_flags_mode_mismatch(tmp_path):
+    doc = _load("fig10")
+    full = copy.deepcopy(doc)
+    full["mode"] = "full"
+    p = tmp_path / "fig10_full.json"
+    p.write_text(json.dumps(full))
+    assert regress.main(["--pair", "fig10", str(BASELINES["fig10"]),
+                         str(p)]) == 1
+
+
+def test_abs_slack_absorbs_tiny_counter_flaps(tmp_path):
+    doc = _load("fig11")
+    tweaked = copy.deepcopy(doc)
+    for r in tweaked["allreduce"]:
+        r["retransmissions"] += 1              # 0 -> 1: within abs slack
+    p = tmp_path / "fig11_tweak.json"
+    p.write_text(json.dumps(tweaked))
+    assert regress.main(["--pair", "fig11", str(BASELINES["fig11"]),
+                         str(p)]) == 0

@@ -86,10 +86,23 @@ def _check_python_cmd(argv, doc, line):
             f"{doc.name}:{line}: `python {script}` does not exist"
 
 
-@pytest.mark.parametrize("doc,line,text", BASH_BLOCKS)
-def test_bash_snippets_reference_real_targets(doc, line, text):
+def _logical_lines(text: str):
+    """Join ``\\``-continued lines so multi-line commands parse whole."""
+    pending = ""
     for raw in text.splitlines():
         raw = raw.strip()
+        if raw.endswith("\\"):
+            pending += raw[:-1] + " "
+            continue
+        yield pending + raw
+        pending = ""
+    if pending:
+        yield pending.rstrip()
+
+
+@pytest.mark.parametrize("doc,line,text", BASH_BLOCKS)
+def test_bash_snippets_reference_real_targets(doc, line, text):
+    for raw in _logical_lines(text):
         if not raw or raw.startswith("#"):
             continue
         toks = shlex.split(raw, comments=True)

@@ -1,0 +1,318 @@
+"""Unified telemetry tests: metric registry, flight recorder,
+Chrome-trace export, counter conservation under loss/spray, engine
+counter bit-identity, and the determinism contract (no wall-clock in
+``repro.core``; two seeded runs export byte-identical traces).
+"""
+import json
+import pathlib
+import re
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from _hyp import given, settings, st
+from repro.core import packet as pk
+from repro.core import pipeline as pipe
+from repro.core import telemetry as tm
+from repro.core.netsim import (ClosConfig, FabricConfig,
+                               clos_incast_scenario, incast_scenario)
+from repro.core.rdma import ENGINE_COUNTERS
+
+
+# ---------------------------------------------------------------------------
+# MetricRegistry
+# ---------------------------------------------------------------------------
+
+def test_typed_metrics():
+    c = tm.Counter()
+    c.inc()
+    c.inc(4)
+    assert c.snapshot() == 5
+    g = tm.Gauge()
+    g.set(2.5)
+    assert g.snapshot() == 2.5
+    h = tm.Histogram(bounds=(1, 4, 16))
+    for v in (0, 1, 3, 20, 1000):
+        h.observe(v)
+    s = h.snapshot()
+    assert s["count"] == 5 and s["sum"] == 1024
+    assert s["min"] == 0 and s["max"] == 1000
+    assert s["buckets"] == [2, 1, 0, 2]       # <=1, <=4, <=16, overflow
+
+
+def test_registry_register_and_reject():
+    reg = tm.MetricRegistry()
+    reg.counter("a/b").inc(3)
+    with pytest.raises(ValueError):
+        reg.counter("a/b")                    # duplicate
+    for bad in ("", "/x", "x/"):
+        with pytest.raises(ValueError):
+            reg.register(bad, tm.Counter())
+    assert reg.paths() == ["a/b"]
+
+
+def test_registry_snapshot_flat_diff():
+    reg = tm.MetricRegistry()
+    c = reg.counter("net/tx")
+    reg.gauge("net/depth", 7)
+    reg.register("node", lambda: {"stats": {"rx": 2, "lst": [1, 2]}})
+    c.inc(10)
+    snap = reg.snapshot()
+    assert snap == {"net": {"tx": 10, "depth": 7},
+                    "node": {"stats": {"rx": 2, "lst": [1, 2]}}}
+    flat = reg.flat(snap)
+    assert flat == {"net/tx": 10, "net/depth": 7, "node/stats/rx": 2,
+                    "node/stats/lst/0": 1, "node/stats/lst/1": 2}
+    c.inc(5)
+    d = reg.diff(snap, reg.snapshot())
+    assert d["net/tx"] == 5 and d["node/stats/rx"] == 0
+
+
+# ---------------------------------------------------------------------------
+# FlightRecorder
+# ---------------------------------------------------------------------------
+
+def test_recorder_ring_bounds_and_counts():
+    rec = tm.FlightRecorder(capacity=4)
+    for i in range(10):
+        rec.record(i, "inject", ("node", 0), psn=i)
+    assert rec.total_events == 10
+    assert rec.dropped_events == 6
+    assert len(rec.events()) == 4
+    assert [e.tick for e in rec.events()] == [6, 7, 8, 9]
+    # monotonic per-kind counts are wrap-independent
+    assert rec.counts["inject"] == 10
+    snap = rec.snapshot()
+    assert snap["events_total"] == 10 and snap["events_retained"] == 4
+    rec.clear()
+    assert rec.total_events == 0 and not rec.events()
+
+
+def test_chrome_trace_phases_and_tracks():
+    rec = tm.FlightRecorder()
+    rec.record(1, "enqueue", ("port", 0), qpn=1, psn=0)
+    rec.record(1, "qdepth", ("port", 0), depth=3)
+    rec.record(2, "coll_transfer", ("coll", "world4"), dur=5, sends=2)
+    rec.record(3, "retransmit", ("qp", "1:7"), psn=9)
+    doc = rec.chrome_trace(tick_us=2)
+    evs = doc["traceEvents"]
+    by_ph = {}
+    for e in evs:
+        by_ph.setdefault(e["ph"], []).append(e)
+    # process/thread metadata for 3 categories + 3 threads
+    names = {e["args"]["name"] for e in by_ph["M"]
+             if e["name"] == "process_name"}
+    assert names == {"port", "coll", "qp"}
+    [cnt] = by_ph["C"]
+    assert cnt["name"] == "qdepth" and cnt["args"]["depth"] == 3
+    [span] = by_ph["X"]
+    assert span["ts"] == 4 and span["dur"] == 10   # tick_us scaling
+    assert span["args"] == {"sends": 2}            # dur lifted out
+    assert {e["name"] for e in by_ph["i"]} == {"enqueue", "retransmit"}
+    json.loads(rec.chrome_trace_json())            # serializable
+
+
+def test_chrome_trace_export_roundtrip(tmp_path):
+    rec = tm.FlightRecorder()
+    res = incast_scenario(2, message_bytes=8192, recorder=rec)
+    path = tmp_path / "trace.json"
+    n = rec.export_chrome_trace(str(path))
+    assert n == len(rec.events()) > 0
+    doc = json.loads(path.read_text())
+    assert doc["otherData"]["clock"] == "sim_ticks"
+    assert any(e["ph"] == "C" for e in doc["traceEvents"])
+
+
+# ---------------------------------------------------------------------------
+# Determinism contract
+# ---------------------------------------------------------------------------
+
+def test_no_wall_clock_in_core():
+    """The simulator's only clock is the integer tick: nothing in
+    ``repro.core`` may read the wall clock (that would break trace
+    byte-identity)."""
+    core = pathlib.Path(__file__).resolve().parents[1] / "src/repro/core"
+    pat = re.compile(r"import\s+time|from\s+time\s+import|perf_counter"
+                     r"|time\.time|datetime|monotonic\(")
+    offenders = [p.name for p in sorted(core.glob("*.py"))
+                 if pat.search(p.read_text())]
+    assert not offenders, f"wall-clock usage in core/: {offenders}"
+
+
+def _traced_run():
+    rec = tm.FlightRecorder()
+    clos_incast_scenario(3, message_bytes=16384, fail_spine_at=10,
+                         recorder=rec)
+    return rec.chrome_trace_json()
+
+
+def test_trace_byte_identical_across_runs():
+    assert _traced_run() == _traced_run()
+
+
+# ---------------------------------------------------------------------------
+# Engine-carried counters (the ecn_cnt pattern)
+# ---------------------------------------------------------------------------
+
+def test_engine_counter_columns_zero_initialized():
+    t = pipe.make_rx_tables(4)
+    for col in pipe.COUNTER_FIELDS:
+        arr = np.asarray(getattr(t, col))
+        assert arr.shape == (4,) and arr.dtype == np.int32
+        assert (arr == 0).all()
+
+
+def test_engine_counters_match_outputs():
+    """Counter columns must reconcile with the per-packet outputs the
+    same pipeline call returns — on both engines."""
+    rng = np.random.default_rng(7)
+    n_pkts, n_qps = 64, 5
+    pkts = []
+    nxt = {}
+    for _ in range(n_pkts):
+        q = int(rng.integers(0, n_qps))
+        p0 = nxt.get(q, 0)
+        use = p0 if rng.random() < 0.7 else max(0, p0 - 1)
+        if use == p0:
+            nxt[q] = p0 + 1
+        pkts.append(pk.Packet(opcode=pk.WRITE_ONLY, qpn=q, psn=use,
+                              payload=np.zeros(32, np.uint8), dma_len=32))
+    batch = {k: jnp.asarray(v)
+             for k, v in pk.batch_from_packets(pkts, mtu=256).items()}
+    t0 = pipe.make_rx_tables(n_qps)
+    for fn in (pipe.rx_pipeline, pipe.rx_pipeline_batched):
+        t1, r = fn(t0, batch)
+        assert int(np.asarray(t1.acc_cnt).sum()) == \
+            int(np.asarray(r.accept).sum())
+        assert int(np.asarray(t1.ecn_tot).sum()) == \
+            int(np.asarray(r.ecn_cnt).sum())
+
+
+def test_engine_totals_match_host_stats_under_loss():
+    """The jitted engine's carried counters, harvested once at snapshot
+    time, must agree exactly with the host-side ``NodeStats`` — for
+    every mapped counter, on a lossy run that exercises dup/ooo paths."""
+    res = incast_scenario(
+        4, message_bytes=32768,
+        fabric_cfg=FabricConfig(port_bandwidth=2, port_delay=2,
+                                queue_capacity=8, seed=3))
+    for node in [res.receiver] + res.senders:
+        totals = node.engine_totals()
+        for host_name, val in totals.items():
+            assert val == getattr(node.stats, host_name), (
+                f"node {node.node_id}: engine {host_name}={val} != host "
+                f"stats {getattr(node.stats, host_name)}")
+    assert res.receiver.engine_totals()["accepted"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Conservation + event reconciliation under random loss/spray
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31), st.integers(2, 4),
+       st.sampled_from([0.0, 0.02, 0.05]),
+       st.sampled_from(["spray", "ecmp"]),
+       st.sampled_from(["selective_repeat", "go_back_n"]))
+def test_counters_reconcile_random_loss_spray(seed, fan_in, loss, path,
+                                              rx_mode):
+    """Packet conservation: every injected packet is delivered, dropped,
+    or still in flight; retransmit stats match recorded retransmit
+    events exactly."""
+    rec = tm.FlightRecorder(capacity=1 << 18)
+    cfg = ClosConfig(nodes_per_leaf=1, n_spines=2, port_bandwidth=4,
+                     port_delay=1, queue_capacity=48, spine_delay=(1, 5),
+                     loss_prob=loss, seed=seed % 997,
+                     path_mode=path)
+    res = clos_incast_scenario(fan_in, message_bytes=8192, clos_cfg=cfg,
+                               rx_mode=rx_mode, path_select=path,
+                               recorder=rec)
+    reg, _ = tm.instrument(fabric=res.fabric,
+                           nodes=[res.receiver] + res.senders,
+                           recorder=rec)
+    snap = reg.snapshot()
+    fab = snap["fabric"]
+    dropped = (fab["ports"]["wire_dropped"] + fab["ports"]["tail_dropped"]
+               + fab["uplinks"]["wire_dropped"]
+               + fab["uplinks"]["tail_dropped"]
+               + fab["spine_down"]["wire_dropped"]
+               + fab["spine_down"]["tail_dropped"]
+               + fab["failure_dropped"])
+    assert fab["injected"] == (dropped + fab["ports"]["delivered"]
+                               + fab["in_flight"]), \
+        "packet conservation violated"
+    by = snap["flight"]["by_kind"]
+    retx = sum(n["retx"]["retransmissions"]
+               for k, n in snap.items() if k.startswith("node"))
+    stats_retx = sum(s.stats.retransmissions
+                     for s in [res.receiver] + res.senders)
+    assert by.get("retransmit", 0) == stats_retx
+    assert retx >= stats_retx          # buffer counts staged resends too
+    # every send recorded either an inject or a wire_drop event
+    assert by.get("inject", 0) + by.get("wire_drop", 0) == fab["injected"]
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31), st.integers(1, 24), st.integers(1, 96))
+def test_counter_columns_scan_vs_batched(seed, n_qps, n_pkts):
+    """The five counter columns are part of the carried state, so the
+    batched engine must produce bit-identical arrays to the scan
+    oracle — including on traces with dup/gap/invalid lanes."""
+    rng = np.random.default_rng(seed)
+    pkts, nxt = [], {}
+    for _ in range(n_pkts):
+        q = int(rng.integers(0, n_qps))
+        p0 = nxt.get(q, 0)
+        r = rng.random()
+        if r < 0.6:
+            use, nxt[q] = p0, p0 + 1
+        elif r < 0.8:
+            use = max(0, p0 - int(rng.integers(1, 3)))
+        else:
+            use = p0 + int(rng.integers(1, 3))
+        pkts.append(pk.Packet(opcode=pk.WRITE_ONLY, qpn=q, psn=use,
+                              payload=np.zeros(16, np.uint8), dma_len=16))
+    b = pk.batch_from_packets(pkts, mtu=256)
+    b["valid"][rng.random(n_pkts) < 0.15] = 0      # invalid lanes
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    t0 = pipe.make_rx_tables(n_qps, initial_credits=4)
+    ta, _ = pipe.rx_pipeline(t0, batch)
+    tb, _ = pipe.rx_pipeline_batched(t0, batch)
+    for col in pipe.COUNTER_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ta, col)), np.asarray(getattr(tb, col)),
+            err_msg=f"counter column {col}")
+
+
+# ---------------------------------------------------------------------------
+# The acceptance scenario: 8:1 incast + mid-run spine failure
+# ---------------------------------------------------------------------------
+
+def test_incast_spine_failure_trace_reconciles(tmp_path):
+    """Perfetto trace of the 8:1 incast with a mid-run spine failure:
+    the export is valid JSON and its event counts reconcile exactly
+    with the MetricRegistry snapshot."""
+    rec = tm.FlightRecorder(capacity=1 << 20)
+    res = clos_incast_scenario(8, message_bytes=16384, fail_spine_at=10,
+                               recorder=rec)
+    reg, _ = tm.instrument(fabric=res.fabric,
+                           nodes=[res.receiver] + res.senders,
+                           recorder=rec)
+    snap = reg.snapshot()
+    assert rec.dropped_events == 0
+    by = snap["flight"]["by_kind"]
+    assert by["inject"] == snap["fabric"]["injected"]
+    assert by.get("enqueue", 0) == \
+        by.get("dequeue", 0) + by.get("flush", 0)
+    assert by.get("spine_fail", 0) == 1
+    assert snap["fabric"]["alive_spines"] == 1
+    # every trace event is retained, so the exported JSON has exactly
+    # the registry's total (plus track metadata records)
+    path = tmp_path / "incast.json"
+    rec.export_chrome_trace(str(path))
+    doc = json.loads(path.read_text())
+    data_events = [e for e in doc["traceEvents"] if e["ph"] != "M"]
+    assert len(data_events) == snap["flight"]["events_total"]
+    assert sum(by.values()) == snap["flight"]["events_total"]
