@@ -76,8 +76,21 @@ def extract_fig11(d: dict) -> Metrics:
     return out
 
 
+def extract_census(d: dict) -> Metrics:
+    """Host-sync census (``BENCH_sync_census.json``, written by
+    ``python -m repro.analysis --census``): device<->host transfers per
+    simulated tick, per fig workload.  Strictly lower-is-better — the
+    fused simulator core (ROADMAP item 2) drives these toward ~0, and
+    nothing may quietly add a new per-tick sync."""
+    out: Metrics = {}
+    for fig, c in sorted(d.get("census", {}).items()):
+        out[f"{fig}/d2h_per_tick"] = (c["d2h_per_tick"], "lower")
+        out[f"{fig}/h2d_per_tick"] = (c["h2d_per_tick"], "lower")
+    return out
+
+
 EXTRACTORS = {"fig6": extract_fig6, "fig10": extract_fig10,
-              "fig11": extract_fig11}
+              "fig11": extract_fig11, "census": extract_census}
 
 
 def compare(fig: str, base: Metrics, fresh: Metrics, *,

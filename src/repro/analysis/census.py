@@ -1,0 +1,161 @@
+"""Host-sync census: measure, per simulated tick, how often the data
+plane round-trips between device and host.
+
+ROADMAP item 2 (the host-sync-free fused simulator core) needs a
+baseline before it can claim progress; this instrument IS that
+baseline.  The two dominant transfer channels in this codebase are
+
+* D2H: ``np.asarray(<jax.Array>)`` — harvesting engine results,
+  credits, payload columns back to the host object model;
+* H2D: ``jnp.asarray(<np.ndarray>)`` / ``jax.device_put`` — shipping
+  packet batches and credit columns into the jitted engines.
+
+``sync_census()`` patches those three call sites (counting only, no
+behavioral change) while one epoch of each fig-bench workload runs a
+deterministic small-scale configuration.  The simulator is seeded and
+tick-deterministic, so the counts are exact integers, stable across
+machines — ``benchmarks/regress.py`` gates them lower-is-better: the
+fused core drives them toward ~0, and nothing may quietly add a new
+per-tick sync.
+
+Workloads mirror the fig benches at smoke scale:
+
+* ``fig6``  — 4:1 incast through the drop-tail switch (batched
+  engine), counted over the ``step_network`` drain loop only;
+* ``fig10`` — streamed DLRM ingest, 2 replicas, counted over
+  ``fetch_shard_streaming``;
+* ``fig11`` — 3-node ring allreduce, counted over ``allreduce``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict
+
+import numpy as np
+
+
+class SyncCounter:
+    def __init__(self):
+        self.d2h = 0
+        self.h2d = 0
+
+
+@contextlib.contextmanager
+def sync_census():
+    """Count device<->host transfers while the body runs.
+
+    Patches ``numpy.asarray`` (D2H when handed a ``jax.Array``),
+    ``jax.numpy.asarray`` and ``jax.device_put`` (H2D when handed host
+    data).  Counting only — values pass through untouched."""
+    import jax
+    import jax.numpy as jnp
+
+    c = SyncCounter()
+    real_np_asarray = np.asarray
+    real_jnp_asarray = jnp.asarray
+    real_device_put = jax.device_put
+
+    def np_asarray(a, *args, **kwargs):
+        if isinstance(a, jax.Array):
+            c.d2h += 1
+        return real_np_asarray(a, *args, **kwargs)
+
+    def jnp_asarray(a, *args, **kwargs):
+        if isinstance(a, np.ndarray):
+            c.h2d += 1
+        return real_jnp_asarray(a, *args, **kwargs)
+
+    def device_put(x, *args, **kwargs):
+        if isinstance(x, np.ndarray):
+            c.h2d += 1
+        return real_device_put(x, *args, **kwargs)
+
+    np.asarray = np_asarray
+    jnp.asarray = jnp_asarray
+    jax.device_put = device_put
+    try:
+        yield c
+    finally:
+        np.asarray = real_np_asarray
+        jnp.asarray = real_jnp_asarray
+        jax.device_put = real_device_put
+
+
+def _result(c: SyncCounter, ticks: int) -> Dict:
+    ticks = max(int(ticks), 1)
+    return {"ticks": int(ticks), "d2h": int(c.d2h), "h2d": int(c.h2d),
+            "d2h_per_tick": round(c.d2h / ticks, 4),
+            "h2d_per_tick": round(c.h2d / ticks, 4)}
+
+
+# --------------------------------------------------------------------------
+# per-fig drivers (fixed seeds, smoke scale)
+# --------------------------------------------------------------------------
+
+def census_fig6(n_senders: int = 4, message_bytes: int = 32768,
+                engine: str = "batched") -> Dict:
+    """One epoch of ``step_network`` over a drop-tail incast — the
+    canonical fig6 congestion workload, counted over the drain loop
+    only (setup H2D like table creation is not the tick loop's debt)."""
+    from repro.core import netsim
+    from repro.core.rdma import RdmaNode, network_pending, step_network
+
+    cfg = netsim.FabricConfig(port_bandwidth=4, port_delay=2,
+                              queue_capacity=32, seed=7)
+    fabric = netsim.SwitchedFabric(n_senders + 1, cfg)
+    recv = RdmaNode(0, fabric, rx_credits=64, engine=engine)
+    senders = [RdmaNode(i + 1, fabric, fc_window=16, engine=engine)
+               for i in range(n_senders)]
+    rng = np.random.default_rng(13)
+    for s in senders:
+        qpn, _, _ = s.init_rdma(message_bytes, recv)
+        s.rdma_write(qpn, rng.integers(0, 256, message_bytes,
+                                       dtype=np.uint8))
+    nodes = [recv] + senders
+    t0 = fabric.now
+    with sync_census() as c:
+        while network_pending(nodes) and fabric.now - t0 < 100_000:
+            step_network(nodes)
+    return _result(c, fabric.now - t0)
+
+
+def census_fig10(n_pkts: int = 8, n_replicas: int = 2,
+                 tile_pkts: int = 2) -> Dict:
+    """One streamed DLRM shard fetch (fig10's streaming arm)."""
+    import jax
+    from benchmarks.fig10_dlrm import (MOD, MTU, N_DENSE, N_SPARSE,
+                                       _shard_fn)
+    from repro.core.ingest import (BalboaIngest, IngestConfig,
+                                   make_dlrm_tile_decoder)
+
+    ing = BalboaIngest(
+        IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=n_replicas,
+                     link_bw_pkts_per_tick=1, tile_pkts=tile_pkts),
+        None, _shard_fn(n_pkts),
+        tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, MOD))
+    with sync_census() as c:
+        batch, rep = ing.fetch_shard_streaming(0)
+        jax.block_until_ready(batch["dense"])
+    return _result(c, rep.ticks)
+
+
+def census_fig11(world: int = 3, n_elems: int = 256) -> Dict:
+    """One ring allreduce over the transport (fig11's ring arm)."""
+    from repro.core.collectives import make_ring_group
+
+    g = make_ring_group(world, max_bytes=n_elems * 4 + world * 4)
+    rng = np.random.default_rng(17)
+    xs = [rng.standard_normal(n_elems).astype(np.float32)
+          for _ in range(world)]
+    t0 = g.net.now
+    with sync_census() as c:
+        g.allreduce(xs)
+    return _result(c, g.net.now - t0)
+
+
+def run_census() -> Dict:
+    """The full census document (``BENCH_sync_census.json`` shape)."""
+    return {"mode": "smoke",
+            "census": {"fig6": census_fig6(),
+                       "fig10": census_fig10(),
+                       "fig11": census_fig11()}}

@@ -117,7 +117,10 @@ class RetransmissionBuffer:
         the flow — surfaced via ``self.exhausted`` so the upper layer
         can tear down / re-establish the QP)."""
         out = []
-        for qpn, q in self.slots.items():
+        # sorted: replay order must not depend on dict insertion
+        # history (reestablish_qp pops and re-adds a QP's slot map)
+        for qpn in sorted(self.slots):
+            q = self.slots[qpn]
             dead = []
             for slot in sorted(q.values(), key=lambda s: s.psn):
                 if now >= slot.deadline:

@@ -215,7 +215,7 @@ def flatten(tree: dict, prefix: str = "") -> Dict[str, Union[int, float]]:
 # spans (ph "X"); everything else is an instant (ph "i").
 EVENT_KINDS = (
     "inject", "wire_drop", "enqueue", "dequeue", "tail_drop", "ecn",
-    "flush", "deliver", "spine_fail", "reroute", "nak", "sack", "retransmit",
+    "flush", "spine_fail", "reroute", "nak", "sack", "retransmit",
     "cnp_tx", "cnp_rx", "completion", "qp_error", "qdepth",
     "stream_issue", "stream_tile", "stream_done", "stream_refetch",
     "coll_transfer",

@@ -1,0 +1,25 @@
+"""Fixture: unsorted dict iteration reaching the wire must be flagged."""
+
+
+class Node:
+    def __init__(self):
+        self.flows = {}
+
+    def send(self, dst, pkt):
+        pass
+
+    def flush(self):
+        for dst, pkt in self.flows.items():   # unsorted -> wire
+            self.send(dst, pkt)
+
+    def flush_sorted(self):
+        # negative case: sorted() iteration is insertion-history-free
+        for dst in sorted(self.flows):
+            self.send(dst, self.flows[dst])
+
+    def tally(self):
+        # negative case: unsorted iteration NOT reaching the wire
+        total = 0
+        for _, pkt in self.flows.items():
+            total += len(pkt)
+        return total

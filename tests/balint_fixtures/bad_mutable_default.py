@@ -1,0 +1,12 @@
+"""Fixture: mutable default arguments the pass must flag."""
+
+
+def accumulate(x, acc=[]):
+    acc.append(x)
+    return acc
+
+
+def index(k, v, table={}, *, tags=set()):
+    table[k] = v
+    tags.add(k)
+    return table

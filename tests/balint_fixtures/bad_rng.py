@@ -1,0 +1,10 @@
+"""Fixture: unseeded / global RNG the determinism pass must flag."""
+import numpy as np
+from numpy.random import default_rng
+
+
+def entropy():
+    xs = np.random.randint(0, 10, 4)      # global RNG
+    np.random.shuffle(xs)                 # global RNG
+    rng = default_rng()                   # unseeded stream
+    return rng.integers(0, 10)

@@ -1,0 +1,11 @@
+"""Fixture: set iteration (hash-randomized order) the pass must flag."""
+
+
+def drain(queues):
+    order = []
+    for q in {1, 2, 3}:                   # set literal
+        order.append(q)
+    for q in set(queues):                 # set() call
+        order.append(q)
+    doubled = [q * 2 for q in set(queues)]  # comprehension over a set
+    return order, doubled

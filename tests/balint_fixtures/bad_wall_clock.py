@@ -1,0 +1,11 @@
+"""Fixture: wall-clock reads the determinism pass must flag."""
+import time
+from datetime import datetime
+
+
+def stamp():
+    t = time.time()
+    p = time.perf_counter()
+    m = time.monotonic()
+    d = datetime.now()
+    return t, p, m, d

@@ -1,0 +1,24 @@
+"""Fixture: the negative cases — none of these may be flagged."""
+import numpy as np
+
+
+def seeded(seed):
+    rng = np.random.default_rng(seed)       # seeded stream: fine
+    return rng.integers(0, 10)
+
+
+def ordered_send(node, flows):
+    for dst in sorted(flows):               # sorted wire iteration: fine
+        node.send(dst, flows[dst])
+    for dst in sorted(set(flows)):          # sorted() consumes the set
+        node.send(dst, flows[dst])
+
+
+def immutable_defaults(x, y=(), z=None):
+    if z is None:
+        z = []
+    return x, y, z
+
+
+def tick_clock(now):
+    return now + 1                          # the only clock: integer ticks

@@ -1,0 +1,12 @@
+"""Fixture: suppression comments hide violations from the report."""
+# balint: disable=mutable-default
+import time
+
+
+def stamp():
+    return time.time()  # balint: disable=wall-clock
+
+
+def accumulate(x, acc=[]):        # hidden by the file-level disable
+    acc.append(x)
+    return acc

@@ -1,0 +1,195 @@
+"""balint (repro.analysis) — the checker gets checked.
+
+Every determinism rule has a positive fixture (known violations that
+MUST be found) and negative cases (clean idioms that must NOT be);
+suppression comments and baseline add/expire semantics are exercised
+end to end; the jaxpr pass is pinned against the live engines; and the
+runtime host-sync census must agree between the scan oracle and the
+batched engine (engine choice is in-graph — it cannot change how often
+the host is crossed).
+"""
+from __future__ import annotations
+
+import pathlib
+
+import pytest
+
+from repro.analysis import run_analysis
+from repro.analysis import determinism, protocol, purity
+from repro.analysis.report import Report, render_json, render_text
+from repro.analysis.violations import (Baseline, Violation,
+                                       apply_suppressions)
+
+FIXTURES = pathlib.Path(__file__).resolve().parent / "balint_fixtures"
+
+
+def _rules_in(path) -> set:
+    return {v.rule for v in determinism.run([path])}
+
+
+# ---------------------------------------------------------------------------
+# determinism rules: positives and negatives
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixture,rule,count", [
+    ("bad_wall_clock.py", "wall-clock", 4),
+    ("bad_rng.py", "unseeded-rng", 3),
+    ("bad_set_iter.py", "set-iteration", 3),
+    ("bad_dict_order.py", "dict-order", 1),
+    ("bad_mutable_default.py", "mutable-default", 3),
+])
+def test_rule_positive(fixture, rule, count):
+    found = [v for v in determinism.run([FIXTURES / fixture])
+             if v.rule == rule]
+    assert len(found) == count, \
+        f"{fixture}: expected {count} {rule} violations, got " \
+        f"{[(v.line, v.message) for v in found]}"
+
+
+def test_rules_do_not_cross_fire():
+    """Each bad_* fixture trips exactly its own rule."""
+    assert _rules_in(FIXTURES / "bad_wall_clock.py") == {"wall-clock"}
+    assert _rules_in(FIXTURES / "bad_mutable_default.py") == \
+        {"mutable-default"}
+
+
+def test_clean_fixture_is_clean():
+    assert determinism.run([FIXTURES / "good_clean.py"]) == []
+
+
+def test_dict_order_negatives():
+    """sorted() iteration and non-wire iteration must not fire."""
+    vs = [v for v in determinism.run([FIXTURES / "bad_dict_order.py"])
+          if v.rule == "dict-order"]
+    assert len(vs) == 1
+    assert "flush" not in vs[0].message or vs[0].line < 15, \
+        "only the unsorted wire loop may fire"
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_suppression_comments():
+    raw = determinism.run([FIXTURES / "suppressed.py"])
+    # the violations exist pre-suppression...
+    assert {v.rule for v in raw} == {"wall-clock", "mutable-default"}
+    # ...and the disable comments hide all of them
+    assert apply_suppressions(raw) == []
+
+
+def test_suppression_is_rule_scoped():
+    """A disable for one rule must not hide another rule's finding on
+    the same line."""
+    v = Violation("unseeded-rng", "tests/balint_fixtures/suppressed.py",
+                  7, "synthetic")
+    assert apply_suppressions([v]) == [v]
+
+
+# ---------------------------------------------------------------------------
+# baseline add / expire
+# ---------------------------------------------------------------------------
+
+def test_baseline_partition_and_expiry():
+    v_live = Violation("wall-clock", "a.py", 3, "wall-clock read")
+    v_new = Violation("dict-order", "b.py", 9, "unsorted send loop")
+    baseline = Baseline([
+        {"rule": "wall-clock", "path": "a.py",
+         "message": "wall-clock read", "reason": "deliberate"},
+        {"rule": "set-iteration", "path": "gone.py",
+         "message": "iteration over a set", "reason": "was deliberate"},
+    ])
+    active, baselined, expired = baseline.partition([v_live, v_new])
+    assert active == [v_new]                 # new debt surfaces
+    assert baselined == [v_live]             # known debt is absorbed
+    assert [e["path"] for e in expired] == ["gone.py"]   # stale entry
+    report = Report(active, baselined, expired, ["determinism"])
+    assert not report.strict_ok              # expired entries fail strict
+
+
+def test_baseline_line_churn_immune():
+    """Fingerprints ignore line numbers: moving a violation within its
+    file must not expire the baseline entry."""
+    v = Violation("wall-clock", "a.py", 99, "wall-clock read")
+    baseline = Baseline([{"rule": "wall-clock", "path": "a.py",
+                          "message": "wall-clock read", "reason": "x"}])
+    active, baselined, expired = baseline.partition([v])
+    assert (active, baselined, expired) == ([], [v], [])
+
+
+def test_fixture_dir_fails_strict():
+    """Acceptance: seeded fixture violations fail a --strict run."""
+    report = run_analysis(paths=[FIXTURES], passes=["determinism"],
+                          baseline_path=None)
+    assert not report.strict_ok
+    assert len(report.violations) >= 10
+
+
+# ---------------------------------------------------------------------------
+# jaxpr pass pins against the live engines
+# ---------------------------------------------------------------------------
+
+ENGINE_ENTRIES = ["rx_pipeline[gbn]", "rx_pipeline[sr]",
+                  "rx_pipeline_batched[gbn]", "rx_pipeline_batched[sr]",
+                  "tx_pipeline", "tx_pipeline_batched"]
+
+
+def test_engines_trace_pure():
+    """Both engines, both rx_modes: no host callbacks, no f64, no
+    concretization.  The only deliberate finding is missing-donation
+    (baselined in balint_baseline.json until ROADMAP item 2 lands)."""
+    vs = purity.run(names=ENGINE_ENTRIES)
+    assert {v.rule for v in vs} <= {"missing-donation"}, \
+        [f"{v.rule}: {v.message}" for v in vs]
+    assert len([v for v in vs if v.rule == "missing-donation"]) == 6
+
+
+def test_protocol_pass_clean():
+    assert protocol.run() == []
+
+
+def test_repo_is_strict_clean():
+    """Acceptance: the checked-in tree passes --strict (AST + protocol
+    passes; the jaxpr pass is pinned separately above)."""
+    report = run_analysis(passes=["determinism", "protocol"])
+    assert report.strict_ok, render_text(report)
+
+
+# ---------------------------------------------------------------------------
+# host-sync census: scan vs batched engines
+# ---------------------------------------------------------------------------
+
+def test_census_scan_vs_batched_identical():
+    """Engine choice is in-graph: the scan oracle and the batched
+    engine must cross the host boundary identically often (PR 8's
+    counter contract — counters ride carried state, no extra syncs)."""
+    from repro.analysis.census import census_fig6
+    scan = census_fig6(n_senders=2, message_bytes=8192, engine="scan")
+    batched = census_fig6(n_senders=2, message_bytes=8192,
+                          engine="batched")
+    assert scan == batched
+    assert scan["d2h"] > 0 and scan["h2d"] > 0   # instrument sees traffic
+
+
+def test_census_deterministic():
+    from repro.analysis.census import census_fig6
+    a = census_fig6(n_senders=2, message_bytes=8192)
+    b = census_fig6(n_senders=2, message_bytes=8192)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# reporters
+# ---------------------------------------------------------------------------
+
+def test_reporters_render():
+    v = Violation("wall-clock", "a.py", 3, "wall-clock read `time.time()`")
+    r = Report([v], [], [{"rule": "dict-order", "path": "b.py",
+                          "message": "gone", "reason": "was deliberate"}],
+               ["determinism"])
+    text = render_text(r)
+    assert "a.py:3" in text and "EXPIRED" in text and "FAIL" in text
+    import json
+    doc = json.loads(render_json(r))
+    assert doc["strict_ok"] is False
+    assert doc["violations"][0]["rule"] == "wall-clock"

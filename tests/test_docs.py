@@ -22,7 +22,8 @@ import pytest
 REPO = Path(__file__).resolve().parents[1]
 DOCS = [REPO / "README.md",
         REPO / "docs" / "ARCHITECTURE.md",
-        REPO / "docs" / "BENCHMARKS.md"]
+        REPO / "docs" / "BENCHMARKS.md",
+        REPO / "docs" / "BALINT.md"]
 
 _FENCE = re.compile(r"^```(\w*)\s*$")
 
@@ -77,8 +78,9 @@ def _check_python_cmd(argv, doc, line):
                 and "." not in mod:
             return                      # e.g. `python -m pytest`
         rel = Path(*mod.split("."))
-        assert (REPO / rel.with_suffix(".py")).exists() or \
-            (REPO / rel / "__main__.py").exists(), \
+        roots = [REPO, REPO / "src"]        # docs say PYTHONPATH=src
+        assert any((r / rel.with_suffix(".py")).exists() or
+                   (r / rel / "__main__.py").exists() for r in roots), \
             f"{doc.name}:{line}: `python -m {mod}` target missing"
     elif argv:
         script = argv[0]

@@ -4,8 +4,6 @@ counter bit-identity, and the determinism contract (no wall-clock in
 ``repro.core``; two seeded runs export byte-identical traces).
 """
 import json
-import pathlib
-import re
 
 import numpy as np
 import pytest
@@ -129,16 +127,18 @@ def test_chrome_trace_export_roundtrip(tmp_path):
 # Determinism contract
 # ---------------------------------------------------------------------------
 
-def test_no_wall_clock_in_core():
-    """The simulator's only clock is the integer tick: nothing in
-    ``repro.core`` may read the wall clock (that would break trace
-    byte-identity)."""
-    core = pathlib.Path(__file__).resolve().parents[1] / "src/repro/core"
-    pat = re.compile(r"import\s+time|from\s+time\s+import|perf_counter"
-                     r"|time\.time|datetime|monotonic\(")
-    offenders = [p.name for p in sorted(core.glob("*.py"))
-                 if pat.search(p.read_text())]
-    assert not offenders, f"wall-clock usage in core/: {offenders}"
+def test_core_determinism_lint_clean():
+    """The simulator's only clock is the integer tick and its only
+    randomness is seeded streams: the balint determinism pass (wall
+    clock, unseeded RNG, set/dict iteration order on wire paths,
+    mutable defaults — see docs/BALINT.md) must report zero violations
+    over ``repro.core``.  Supersedes the old ad-hoc wall-clock grep."""
+    from repro.analysis import run_analysis
+    report = run_analysis(paths=["src/repro/core"],
+                          passes=["determinism"])
+    assert not report.violations, "\n".join(
+        f"{v.path}:{v.line}: [{v.rule}] {v.message}"
+        for v in report.violations)
 
 
 def _traced_run():
