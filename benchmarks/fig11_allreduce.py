@@ -54,14 +54,15 @@ def _tensors(world: int, n_elems: int, seed: int = 13):
 
 def allreduce_arm(world: int, n_elems: int, *, offload: bool,
                   cc: str = "ack_clocked", fabric_cfg=None,
-                  telemetry: bool = False) -> dict:
+                  telemetry: bool = False,
+                  epoch_mode: str = None) -> dict:
     """One measured allreduce, output verified bit-identical to the
     oracle."""
     if fabric_cfg is None:
         fabric_cfg = dcqcn_fabric_profile() if cc == "dcqcn" else BASE_FABRIC
     g = make_ring_group(world, max_bytes=n_elems * 4 + world * 4,
                         fabric_cfg=fabric_cfg, offload=offload,
-                        congestion_control=cc)
+                        congestion_control=cc, epoch_mode=epoch_mode)
     reg = None
     if telemetry:
         rec = tm.FlightRecorder(capacity=1 << 20)
@@ -161,6 +162,16 @@ def main(argv=None):
         results["lossy"] = lossy_arm()
     results["instrumented"] = allreduce_arm(
         4, 16_384, offload=True, telemetry=True)
+    # fused epoch arm: the software ring on the fused epoch driver must
+    # report the same tick-visible metrics as per-tick stepping (the
+    # allreduce output itself is already oracle-pinned inside the arm)
+    tick = allreduce_arm(4, 16_384, offload=False)
+    fused = allreduce_arm(4, 16_384, offload=False, epoch_mode="fused")
+    keys = ("ticks", "busbw_B_per_tick", "retransmissions",
+            "tail_dropped")
+    assert {k: fused[k] for k in keys} == {k: tick[k] for k in keys}, \
+        f"fused allreduce diverged from per-tick: {fused} vs {tick}"
+    results["fused_epoch"] = {"tick": tick, "fused": fused}
     if args.json:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)

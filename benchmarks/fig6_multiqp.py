@@ -86,7 +86,9 @@ def _pps(fn, n_qps: int, n_pkts: int, iters: int = 11) -> float:
     """Median aggregate packets/sec of one jitted RX step."""
     batch = _trace_batch(n_qps, n_pkts)
     tables = pipe.make_rx_tables(n_qps, initial_credits=1 << 30)
-    us = time_fn(lambda: fn(tables, batch)[1].accept, iters=iters)
+    # the engine donates its tables arg: clone per timed call
+    us = time_fn(lambda: fn(pipe.clone_tables(tables), batch)[1].accept,
+                 iters=iters)
     return n_pkts * 1e6 / us
 
 
@@ -141,6 +143,48 @@ def incast(n_senders: int = 8, message_bytes: int = 32768):
     assert hot.tail_dropped > 0, "incast produced no congestion drops"
     assert res.receiver.stats.accepted == n_senders * pk.read_resp_npkts(
         message_bytes), "incast lost data"
+
+
+def fused_epoch_equivalence(n_senders: int = 4,
+                            message_bytes: int = 32768) -> dict:
+    """The canonical drop-tail incast driven two ways: per-tick
+    stepping vs the fused epoch core (``run_network(epoch_mode=
+    'fused')``).  Every transport-visible counter must be bit-identical
+    — tests/test_fused_core.py pins the full world state at unit scale,
+    this pins the contract at bench scale and records what the fused
+    driver costs/saves in wall clock (the tick metrics are what the
+    regression gate sees; wall time is informational)."""
+    import time
+    arms = {}
+    for mode in ("tick", "fused"):
+        t0 = time.perf_counter()
+        res = incast_scenario(
+            n_senders, message_bytes=message_bytes,
+            fabric_cfg=FabricConfig(port_bandwidth=4, port_delay=2,
+                                    queue_capacity=24, seed=7),
+            epoch_mode=mode)
+        wall = time.perf_counter() - t0
+        hot = res.fabric.port_stats[0]
+        arms[mode] = {
+            "ticks": int(res.ticks),
+            "wall_s": round(wall, 4),
+            "accepted": int(res.receiver.stats.accepted),
+            "tail_dropped": int(hot.tail_dropped),
+            "max_queue": int(hot.max_depth),
+            "retransmissions": int(sum(s.stats.retransmissions
+                                       for s in res.senders)),
+        }
+    keys = ("ticks", "accepted", "tail_dropped", "max_queue",
+            "retransmissions")
+    tick = {k: arms["tick"][k] for k in keys}
+    fused = {k: arms["fused"][k] for k in keys}
+    assert tick == fused, \
+        f"fused epoch diverged from per-tick: {fused} vs {tick}"
+    emit(f"fig6_fused_epoch_{n_senders}to1",
+         arms["fused"]["wall_s"] * 1e6,
+         f"ticks={tick['ticks']};tick_wall_s={arms['tick']['wall_s']};"
+         f"fused_wall_s={arms['fused']['wall_s']}")
+    return arms
 
 
 def _incast_cc_arm(n_senders: int, message_bytes: int, cc: str) -> dict:
@@ -335,6 +379,8 @@ def main(argv=None):
         # goodput under spray with fewer retransmissions (checked inside)
         results["multipath"] = multipath_sweep(
             fan_ins=(3,), message_bytes=32768)
+        results["fused_epoch"] = fused_epoch_equivalence(
+            n_senders=4, message_bytes=16384)
     else:
         results["sweep_speedup"] = {str(k): round(v, 2)
                                     for k, v in sweep().items()}
@@ -349,6 +395,7 @@ def main(argv=None):
         incast()
         results["incast_cc"] = incast_cc_sweep()
         results["multipath"] = multipath_sweep()
+        results["fused_epoch"] = fused_epoch_equivalence()
     results["traced_incast"] = traced_incast(
         message_bytes=16384 if args.smoke else 32768,
         trace_path=args.trace)

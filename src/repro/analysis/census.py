@@ -93,12 +93,17 @@ def _result(c: SyncCounter, ticks: int) -> Dict:
 # --------------------------------------------------------------------------
 
 def census_fig6(n_senders: int = 4, message_bytes: int = 32768,
-                engine: str = "batched") -> Dict:
+                engine: str = "batched",
+                epoch_mode: str = None) -> Dict:
     """One epoch of ``step_network`` over a drop-tail incast — the
     canonical fig6 congestion workload, counted over the drain loop
-    only (setup H2D like table creation is not the tick loop's debt)."""
+    only (setup H2D like table creation is not the tick loop's debt).
+    ``epoch_mode='fused'`` drives the same world through
+    ``run_network``'s fused epoch driver instead of per-tick stepping —
+    the whole drain becomes O(1) pack/unpack transfers."""
     from repro.core import netsim
-    from repro.core.rdma import RdmaNode, network_pending, step_network
+    from repro.core.rdma import (RdmaNode, network_pending, run_network,
+                                 step_network)
 
     cfg = netsim.FabricConfig(port_bandwidth=4, port_delay=2,
                               queue_capacity=32, seed=7)
@@ -114,14 +119,19 @@ def census_fig6(n_senders: int = 4, message_bytes: int = 32768,
     nodes = [recv] + senders
     t0 = fabric.now
     with sync_census() as c:
-        while network_pending(nodes) and fabric.now - t0 < 100_000:
-            step_network(nodes)
+        if epoch_mode:
+            run_network(nodes, max_ticks=100_000, epoch_mode=epoch_mode)
+        else:
+            while network_pending(nodes) and fabric.now - t0 < 100_000:
+                step_network(nodes)
     return _result(c, fabric.now - t0)
 
 
 def census_fig10(n_pkts: int = 8, n_replicas: int = 2,
-                 tile_pkts: int = 2) -> Dict:
-    """One streamed DLRM shard fetch (fig10's streaming arm)."""
+                 tile_pkts: int = 2, epoch_mode: str = None) -> Dict:
+    """One streamed DLRM shard fetch (fig10's streaming arm).
+    ``epoch_mode='fused'`` turns the per-tick advance inside the stream
+    loop into watermark-bounded fused micro-epochs."""
     import jax
     from benchmarks.fig10_dlrm import (MOD, MTU, N_DENSE, N_SPARSE,
                                        _shard_fn)
@@ -130,7 +140,8 @@ def census_fig10(n_pkts: int = 8, n_replicas: int = 2,
 
     ing = BalboaIngest(
         IngestConfig(batch_bytes=n_pkts * MTU, n_storage_nodes=n_replicas,
-                     link_bw_pkts_per_tick=1, tile_pkts=tile_pkts),
+                     link_bw_pkts_per_tick=1, tile_pkts=tile_pkts,
+                     epoch_mode=epoch_mode),
         None, _shard_fn(n_pkts),
         tile_to_batch=make_dlrm_tile_decoder(N_DENSE, N_SPARSE, MOD))
     with sync_census() as c:
@@ -139,11 +150,13 @@ def census_fig10(n_pkts: int = 8, n_replicas: int = 2,
     return _result(c, rep.ticks)
 
 
-def census_fig11(world: int = 3, n_elems: int = 256) -> Dict:
+def census_fig11(world: int = 3, n_elems: int = 256,
+                 epoch_mode: str = None) -> Dict:
     """One ring allreduce over the transport (fig11's ring arm)."""
     from repro.core.collectives import make_ring_group
 
-    g = make_ring_group(world, max_bytes=n_elems * 4 + world * 4)
+    g = make_ring_group(world, max_bytes=n_elems * 4 + world * 4,
+                        epoch_mode=epoch_mode)
     rng = np.random.default_rng(17)
     xs = [rng.standard_normal(n_elems).astype(np.float32)
           for _ in range(world)]
@@ -154,8 +167,19 @@ def census_fig11(world: int = 3, n_elems: int = 256) -> Dict:
 
 
 def run_census() -> Dict:
-    """The full census document (``BENCH_sync_census.json`` shape)."""
+    """The full census document (``BENCH_sync_census.json`` shape).
+
+    Each fig workload is counted twice: the per-tick arm (the debt
+    ROADMAP item 2 set out to retire) and the fused-epoch arm (what
+    the fused core actually spends).  Both arms are committed and
+    gated lower-is-better by ``benchmarks/regress.py`` — the per-tick
+    arm so the legacy path cannot quietly grow new syncs, the fused
+    arm so the fused core cannot quietly fall back to per-tick
+    stepping (a fallback shows up as a ~10x jump in d2h_per_tick)."""
     return {"mode": "smoke",
             "census": {"fig6": census_fig6(),
+                       "fig6_fused": census_fig6(epoch_mode="fused"),
                        "fig10": census_fig10(),
-                       "fig11": census_fig11()}}
+                       "fig10_fused": census_fig10(epoch_mode="fused"),
+                       "fig11": census_fig11(),
+                       "fig11_fused": census_fig11(epoch_mode="fused")}}

@@ -189,7 +189,34 @@ def registry() -> List[EntryPoint]:
         EntryPoint("kernels.reduce_fold_pallas", red.reduce_fold_pallas,
                    fold_args),
     ]
+    eps.append(_fused_epoch_entry())
     return eps
+
+
+def _fused_epoch_entry() -> EntryPoint:
+    """The fused epoch core (ROADMAP item 2): pack a minimal star world
+    and register its jitted blob->blob epoch function.  carries_state
+    pins the donated-carry contract — the whole point of the fused core
+    is ONE donated input buffer per epoch, so losing the donation
+    annotation is a regression balint must catch."""
+    import jax.numpy as jnp
+    from repro.core import fused as fz
+    from repro.core import netsim
+    from repro.core.rdma import RdmaNode
+
+    cfg = netsim.FabricConfig(port_bandwidth=2, port_delay=2,
+                              queue_capacity=16, seed=3)
+    fab = netsim.SwitchedFabric(2, cfg)
+    recv = RdmaNode(0, fab, n_qps=8)
+    snd = RdmaNode(1, fab, n_qps=8)
+    qpn, _, _ = snd.init_rdma(4096, recv)
+    snd.rdma_write(qpn, np.zeros(1024, np.uint8))
+    world = fz.try_pack([recv, snd], 64, 8, None)
+    assert world is not None, "canonical star world must be fusable"
+    return EntryPoint("fused.epoch[star-gbn]",
+                      fz.make_epoch_fn(world.skey),
+                      lambda: ((jnp.asarray(world.vec0),), {}),
+                      carries_state=True, site=fz.make_epoch_fn)
 
 
 # --------------------------------------------------------------------------

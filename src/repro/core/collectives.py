@@ -138,7 +138,8 @@ class CollectiveGroup:
 
     def __init__(self, nodes: Sequence[RdmaNode], max_bytes: int, *,
                  dtype: str = "float32", offload: bool = False,
-                 impl: Optional[str] = None, max_ticks: int = 300_000):
+                 impl: Optional[str] = None, max_ticks: int = 300_000,
+                 epoch_mode: Optional[str] = None):
         if len(nodes) < 2:
             raise ValueError("a collective group needs at least 2 ranks")
         if dtype not in _DTYPES:
@@ -151,6 +152,9 @@ class CollectiveGroup:
         self.impl = impl if impl is not None else _default_impl()
         self.offload = offload
         self.max_ticks = max_ticks
+        self.epoch_mode = epoch_mode    # None = env BALBOA_EPOCH_MODE;
+                                        # "fused" = jitted whole-epoch
+                                        # transfers (core.fused)
         self.stats = CollectiveStats()
         self.recorder = None
         self._op_seq = 0
@@ -216,7 +220,8 @@ class CollectiveGroup:
             self.nodes[src].rdma_write(self._qpn[src][dst], data,
                                        remote_addr=addr, coll=coll)
         t0 = self.net.now
-        run_network(self.nodes, max_ticks=self.max_ticks)
+        run_network(self.nodes, max_ticks=self.max_ticks,
+                    epoch_mode=self.epoch_mode)
         self.stats.ticks += self.net.now - t0
         self.stats.transfers += 1
         if self.recorder is not None:
@@ -446,7 +451,8 @@ def make_ring_group(world: int, max_bytes: int, *,
                     impl: Optional[str] = None,
                     max_ticks: int = 300_000,
                     rx_mode: str = "go_back_n",
-                    path_select: Optional[str] = None):
+                    path_select: Optional[str] = None,
+                    epoch_mode: Optional[str] = None):
     """Convenience constructor: ``world`` nodes on a fresh fabric
     (ports = ranks), mesh-connected into a ``CollectiveGroup``.
     Returns the group (nodes at ``group.nodes``).
@@ -473,4 +479,5 @@ def make_ring_group(world: int, max_bytes: int, *,
                       rx_mode=rx_mode, path_select=path_select)
              for i in range(world)]
     return CollectiveGroup(nodes, max_bytes, dtype=dtype, offload=offload,
-                           impl=impl, max_ticks=max_ticks)
+                           impl=impl, max_ticks=max_ticks,
+                           epoch_mode=epoch_mode)

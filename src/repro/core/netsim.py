@@ -57,6 +57,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core import chaos as _chaos
 from repro.core import packet as pk
 
 
@@ -68,6 +69,10 @@ class LinkConfig:
     jitter_ticks: int = 0
     bandwidth_pkts_per_tick: int = 0     # 0 = unshaped
     seed: int = 0
+    # chaos mode: when set, loss / jitter / reorder decisions come from
+    # the counter-keyed hash in ``repro.core.chaos`` instead of the rng
+    # stream — replayable inside the fused epoch core (``core.fused``).
+    chaos_seed: Optional[int] = None
 
 
 class Link:
@@ -81,9 +86,13 @@ class Link:
         self.sent = 0
         self.dropped = 0
         self.on_event = None     # flight-recorder hook: (kind, packet)
+        self._ctick = -1         # chaos mode: per-tick send rank
+        self._cidx = 0
 
     def send(self, p: pk.Packet, now: int):
         self.sent += 1
+        if self.cfg.chaos_seed is not None:
+            return self._send_chaos(p, now)
         if self.rng.random() < self.cfg.loss_prob:
             self.dropped += 1
             if self.on_event is not None:
@@ -96,6 +105,35 @@ class Link:
             delay += int(self.rng.integers(0, self.cfg.jitter_ticks + 1))
         if self.rng.random() < self.cfg.reorder_prob:
             delay += int(self.rng.integers(1, 8))
+        self._seq += 1
+        heapq.heappush(self._heap, (now + delay, self._seq, p))
+
+    def _send_chaos(self, p: pk.Packet, now: int):
+        """Counter-keyed decisions: every send on this link takes the
+        next rank within its tick; each decision hashes (seed, purpose,
+        tick, rank) independently — the exact stream ``core.fused``
+        replays in-graph."""
+        if now != self._ctick:
+            self._ctick, self._cidx = now, 0
+        i, s = self._cidx, self.cfg.chaos_seed
+        self._cidx += 1
+        if self.cfg.loss_prob and _chaos.hash32(
+                s, _chaos.TAG_LOSS, now, i) < _chaos.u32_prob(
+                    self.cfg.loss_prob):
+            self.dropped += 1
+            if self.on_event is not None:
+                self.on_event("wire_drop", p)
+            return
+        if self.on_event is not None:
+            self.on_event("inject", p)
+        delay = self.cfg.latency_ticks
+        if self.cfg.jitter_ticks:
+            delay += _chaos.hash32(s, _chaos.TAG_JITTER, now, i) \
+                % (self.cfg.jitter_ticks + 1)
+        if self.cfg.reorder_prob and _chaos.hash32(
+                s, _chaos.TAG_REORDER, now, i) < _chaos.u32_prob(
+                    self.cfg.reorder_prob):
+            delay += 1 + _chaos.hash32(s, _chaos.TAG_RDELAY, now, i) % 7
         self._seq += 1
         heapq.heappush(self._heap, (now + delay, self._seq, p))
 
@@ -121,7 +159,10 @@ class Network:
         for a in range(n_nodes):
             for b in range(n_nodes):
                 if a != b:
-                    c = dataclasses.replace(cfg, seed=cfg.seed * 1000 + a * 37 + b)
+                    c = dataclasses.replace(
+                        cfg, seed=cfg.seed * 1000 + a * 37 + b,
+                        chaos_seed=None if cfg.chaos_seed is None else
+                        _chaos.link_stream(cfg.chaos_seed, a, b))
                     self.links[(a, b)] = Link(c)
         self.now = 0
         self.recorder = None
@@ -408,6 +449,11 @@ class FabricConfig:
     ecn_kmax: int = 0                               # CE-mark saturation (0=off)
     ecn_pmax: float = 1.0                           # mark prob at kmax
     seed: int = 0
+    # chaos mode: when set, wire-loss and RED draws come from the
+    # counter-keyed hash in ``repro.core.chaos`` (loss ranked by send
+    # order within the tick, RED by pop order across ports) — the same
+    # stream ``core.fused`` replays in-graph.
+    chaos_seed: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -558,6 +604,20 @@ class SwitchedFabric:
         self.reducer: Optional[SwitchReducer] = None
         self.recorder = None
         self.injected = 0        # send() calls (conservation anchor)
+        self._ctick = -1         # chaos mode: per-tick send / pop ranks
+        self._csend = 0
+        self._cpop = 0
+
+    def _chaos_rank(self, kind: str) -> int:
+        """Next chaos rank within the current tick (``kind`` selects the
+        send or pop counter; both reset together on a new tick)."""
+        if self.now != self._ctick:
+            self._ctick, self._csend, self._cpop = self.now, 0, 0
+        if kind == "send":
+            i, self._csend = self._csend, self._csend + 1
+        else:
+            i, self._cpop = self._cpop, self._cpop + 1
+        return i
 
     def attach_reducer(self, reducer: SwitchReducer):
         """Install the in-fabric reduction offload (collective control
@@ -575,12 +635,21 @@ class SwitchedFabric:
     def send(self, src: int, dst: int, p: pk.Packet):
         self.injected += 1
         st = self.port_stats[dst]
-        if self.cfg.loss_prob and self.rng.random() < self.cfg.loss_prob:
-            st.wire_dropped += 1
-            if self.recorder is not None:
-                self.recorder.record(self.now, "wire_drop", ("node", src),
-                                     qpn=p.qpn, psn=p.psn, dst=dst)
-            return
+        if self.cfg.loss_prob:
+            if self.cfg.chaos_seed is not None:
+                lost = _chaos.hash32(
+                    self.cfg.chaos_seed, _chaos.TAG_LOSS, self.now,
+                    self._chaos_rank("send")) < _chaos.u32_prob(
+                        self.cfg.loss_prob)
+            else:
+                lost = self.rng.random() < self.cfg.loss_prob
+            if lost:
+                st.wire_dropped += 1
+                if self.recorder is not None:
+                    self.recorder.record(self.now, "wire_drop",
+                                         ("node", src),
+                                         qpn=p.qpn, psn=p.psn, dst=dst)
+                return
         if self.recorder is not None:
             self.recorder.record(self.now, "inject", ("node", src),
                                  qpn=p.qpn, psn=p.psn, dst=dst)
@@ -616,6 +685,14 @@ class SwitchedFabric:
         self.egress[dst].enqueue(p)
 
     def _ecn_mark(self, depth: int) -> bool:
+        if self.cfg.chaos_seed is not None and self.cfg.ecn_kmax > 0:
+            # every pop consumes one rank (whether or not the depth is
+            # inside the ramp), so the fused core can rank pops by
+            # (port asc, pop order) without replaying the ramp test
+            return _chaos.red_mark(self.cfg.chaos_seed, self.now,
+                                   self._chaos_rank("pop"), depth,
+                                   self.cfg.ecn_kmin, self.cfg.ecn_kmax,
+                                   self.cfg.ecn_pmax)
         return _red_mark(self.rng, depth, self.cfg.ecn_kmin,
                          self.cfg.ecn_kmax, self.cfg.ecn_pmax)
 
@@ -995,7 +1072,8 @@ def incast_scenario(n_senders: int, *, message_bytes: int = 65536,
                     max_ticks: int = 300_000,
                     engine: str = "batched",
                     congestion_control: str = "ack_clocked",
-                    recorder=None) -> IncastResult:
+                    recorder=None,
+                    epoch_mode: Optional[str] = None) -> IncastResult:
     """The canonical congestion scenario: ``n_senders`` nodes RDMA-WRITE
     simultaneously into one receiver through a shallow-buffered switch
     port.  Runs until the fabric drains — callers assert delivery and
@@ -1038,7 +1116,8 @@ def incast_scenario(n_senders: int, *, message_bytes: int = 65536,
         work.append((s, qpn, data))
     for s, qpn, data in work:
         s.rdma_write(qpn, data)
-    ticks = run_network([recv] + senders, max_ticks=max_ticks)
+    ticks = run_network([recv] + senders, max_ticks=max_ticks,
+                        epoch_mode=epoch_mode)
     return IncastResult(receiver=recv, senders=senders, fabric=fabric,
                         ticks=ticks, payloads=[d for _, _, d in work])
 

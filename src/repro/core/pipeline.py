@@ -42,6 +42,7 @@ All paths are jittable, differentiation-free integer programs.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Dict, NamedTuple, Tuple
 
 import jax
@@ -281,7 +282,7 @@ def _ensure_defaults(batch: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
     return batch
 
 
-@jax.jit
+@partial(jax.jit, donate_argnums=(0,))
 def rx_pipeline(tables: RxTables, batch: Dict[str, jax.Array]
                 ) -> Tuple[RxTables, RxResult]:
     """Per-packet oracle: scan the RX FSM over the batch in arrival
@@ -315,7 +316,7 @@ _OUT_BOOL = ("accept", "dup", "ooo", "dropped_credit", "rkey_err",
              "send_ack", "send_nak", "ecn_echo")
 
 
-@jax.jit
+@partial(jax.jit, donate_argnums=(0,))
 def rx_pipeline_batched(tables: RxTables, batch: Dict[str, jax.Array]
                         ) -> Tuple[RxTables, RxResult]:
     """Batched multi-QP RX engine (the tentpole: paper §4.1 at scale).
@@ -457,7 +458,7 @@ class TxTables(NamedTuple):
     msn: jax.Array         # (Q,) int32
 
 
-@jax.jit
+@partial(jax.jit, donate_argnums=(0,))
 def tx_pipeline(tables: TxTables, cmds: Dict[str, jax.Array]
                 ) -> Tuple[TxTables, Dict[str, jax.Array]]:
     """TX path oracle: assign consecutive PSNs per command (one command
@@ -477,7 +478,7 @@ def tx_pipeline(tables: TxTables, cmds: Dict[str, jax.Array]
     return tables, outs
 
 
-@jax.jit
+@partial(jax.jit, donate_argnums=(0,))
 def tx_pipeline_batched(tables: TxTables, cmds: Dict[str, jax.Array]
                         ) -> Tuple[TxTables, Dict[str, jax.Array]]:
     """Batched TX engine: PSN-range assignment is a per-QP segmented
@@ -509,6 +510,18 @@ def tx_pipeline_batched(tables: TxTables, cmds: Dict[str, jax.Array]
 
 RX_ENGINES = {"scan": rx_pipeline, "batched": rx_pipeline_batched}
 TX_ENGINES = {"scan": tx_pipeline, "batched": tx_pipeline_batched}
+
+
+def clone_tables(t):
+    """Deep-copy an Rx/TxTables value onto fresh device buffers.
+
+    Every engine donates its carried-table argument (alloc-free carry
+    for the fused epoch core), so the caller's input buffers are DEAD
+    after the call.  The normal ``self.tables, res = engine(self.tables,
+    batch)`` rebind never notices — but any caller that feeds the same
+    table value to two engines (the scan/batched bit-identity tests) or
+    re-times one call in a loop (the fig benches) must clone per use."""
+    return type(t)(*(jnp.array(a) for a in t))
 
 
 def make_rx_tables(n_qps: int, initial_credits: int = 64) -> RxTables:

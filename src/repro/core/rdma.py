@@ -30,6 +30,7 @@ Programming model mirrors the Coyote-thread verbs of §4.6:
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -687,8 +688,15 @@ class RdmaNode:
         buf = self._buffer_for(qpn)
         data = buf[p.vaddr:p.vaddr + p.dma_len] if buf is not None else \
             np.zeros(p.dma_len, np.uint8)
-        self._submit(qpn, "read_resp", 0, data)
+        # ACK the request BEFORE streaming the response: on a shaped
+        # link the ACK would otherwise queue behind the whole response
+        # burst, leaving the requester's READ_REQUEST retransmit slot
+        # held (and its fc budget debited) for the entire stream — and
+        # parking the fused epoch core (core.fused) in per-tick fallback
+        # for exactly as long, since a non-payload held slot is one of
+        # the things its in-graph twin does not model
         self._send_ctrl(qpn, pk.make_ack(self._remote_qpn(qpn), p.psn))
+        self._submit(qpn, "read_resp", 0, data)
 
     # ------------------------------------------------------------ timers
     def tick(self):
@@ -799,10 +807,46 @@ def network_pending(nodes: List[RdmaNode]) -> bool:
 
 
 def run_network(nodes: List[RdmaNode], max_ticks: int = 100_000,
-                idle_done: int = 8) -> int:
+                idle_done: int = 8, *,
+                epoch_mode: Optional[str] = None) -> int:
     """Drive the simulation until quiescent: no packets in flight, no
     unacked payloads awaiting (re)transmission, no queued flow-control
-    requests.  Returns ticks elapsed."""
+    requests.  Returns ticks elapsed.
+
+    ``epoch_mode="fused"`` (or env ``BALBOA_EPOCH_MODE=fused``) runs
+    whole epochs inside one jitted ``while_loop`` on device
+    (``repro.core.fused``) instead of round-tripping device<->host every
+    tick; any world the fused twin does not model falls back to per-tick
+    stepping, one tick at a time, re-attempting fusion after each (e.g.
+    an in-flight READ_REQUEST unfuses only until it is ACKed).  The
+    fused path is bit-identical to per-tick stepping — pinned by
+    ``tests/test_fused_core.py`` — except that interleaving fallback
+    ticks with fused epochs may re-run up to ``idle_done`` quiescent
+    (no-op) ticks, shifting only ``net.now`` and the returned count."""
+    mode = epoch_mode or os.environ.get("BALBOA_EPOCH_MODE") or "tick"
+    if mode not in ("tick", "fused"):
+        raise ValueError(f"unknown epoch_mode {mode!r}; "
+                         f"choose from ('tick', 'fused')")
+    if mode == "fused":
+        from repro.core import fused as _fused
+        t, idle = 0, 0
+        while t < max_ticks:
+            res = _fused.run_fused_epoch(nodes, max_ticks=max_ticks - t,
+                                         idle_done=idle_done)
+            if res is None:                      # unfusable: oracle tick
+                step_network(nodes)
+                t += 1
+                if network_pending(nodes):
+                    idle = 0
+                else:
+                    idle += 1
+                    if idle >= idle_done:
+                        return t - 1
+                continue
+            t += res["steps"]
+            if res["idle_exit"]:
+                return t - 1
+        return max_ticks
     idle = 0
     for t in range(max_ticks):
         step_network(nodes)

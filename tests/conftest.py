@@ -1,0 +1,13 @@
+"""Suite-wide pytest wiring.
+
+Importing ``_hyp`` here applies the repo's hypothesis profile
+("balboa": ``deadline=None`` + ``derandomize=True``) to every test
+module before collection — real-hypothesis CI runs and the
+no-hypothesis fallback container take the same code path, so the
+property suites (tests/test_fused_core.py and friends) can never flake
+on a per-example deadline or an ambient random seed.  Kept out of
+``addopts`` deliberately: ``--hypothesis-profile`` only parses when the
+hypothesis pytest plugin is installed, and tier-1 must still run on the
+bare container without it.
+"""
+import _hyp  # noqa: F401  (registers + loads the profile on import)

@@ -136,12 +136,12 @@ ENGINE_ENTRIES = ["rx_pipeline[gbn]", "rx_pipeline[sr]",
 
 def test_engines_trace_pure():
     """Both engines, both rx_modes: no host callbacks, no f64, no
-    concretization.  The only deliberate finding is missing-donation
-    (baselined in balint_baseline.json until ROADMAP item 2 lands)."""
+    concretization — and since the fused epoch core landed (ROADMAP
+    item 2), no missing-donation either: every engine entry point
+    donates its carried table state, so the six baselined debt entries
+    are retired and the registry must come back empty."""
     vs = purity.run(names=ENGINE_ENTRIES)
-    assert {v.rule for v in vs} <= {"missing-donation"}, \
-        [f"{v.rule}: {v.message}" for v in vs]
-    assert len([v for v in vs if v.rule == "missing-donation"]) == 6
+    assert vs == [], [f"{v.rule}: {v.message}" for v in vs]
 
 
 def test_protocol_pass_clean():

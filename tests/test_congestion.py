@@ -187,7 +187,8 @@ def test_rx_engines_bit_identical_under_ecn(seed, n_qps, n_pkts, pad):
         b["ecn"][n_pkts:] = 1              # CE on dead lanes must not count
     batch = {k: jnp.asarray(v) for k, v in b.items()}
     t0 = pipe.make_rx_tables(n_qps, initial_credits=5)
-    ta, ra = pipe.rx_pipeline(t0, batch)
+    # engines donate their tables arg — clone so both see the same t0
+    ta, ra = pipe.rx_pipeline(pipe.clone_tables(t0), batch)
     tb, rb = pipe.rx_pipeline_batched(t0, batch)
     for f in pipe.RxTables._fields:
         np.testing.assert_array_equal(

@@ -112,7 +112,8 @@ def test_rx_batched_bit_identical_to_scan(seed, n_qps, n_pkts, pad):
         b["valid"][n_pkts:] = 0
     batch = {k: jnp.asarray(v) for k, v in b.items()}
     t0 = pipe.make_rx_tables(n_qps, initial_credits=5)
-    ta, ra = pipe.rx_pipeline(t0, batch)
+    # engines donate their tables arg — clone so both see the same t0
+    ta, ra = pipe.rx_pipeline(pipe.clone_tables(t0), batch)
     tb, rb = pipe.rx_pipeline_batched(t0, batch)
     for f in pipe.RxTables._fields:
         np.testing.assert_array_equal(
@@ -131,7 +132,7 @@ def test_tx_batched_bit_identical_to_scan(seed, n_qps, n_cmds):
     cmds = {"qpn": jnp.asarray(rng.integers(0, n_qps, n_cmds), jnp.int32),
             "n_pkts": jnp.asarray(rng.integers(1, 9, n_cmds), jnp.int32)}
     t0 = pipe.make_tx_tables(n_qps)
-    ta, oa = pipe.tx_pipeline(t0, cmds)
+    ta, oa = pipe.tx_pipeline(pipe.clone_tables(t0), cmds)
     tb, ob = pipe.tx_pipeline_batched(t0, cmds)
     np.testing.assert_array_equal(np.asarray(oa["start_psn"]),
                                   np.asarray(ob["start_psn"]))

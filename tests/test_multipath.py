@@ -124,7 +124,8 @@ def test_sr_engines_match_reference(seed, n_pkts, credits):
              for k, v in pk.batch_from_packets(pkts, mtu=64).items()}
     t0 = pipe.make_rx_tables(1, initial_credits=credits)
     t0 = t0._replace(sr=jnp.ones_like(t0.sr))
-    ta, ra = pipe.rx_pipeline(t0, batch)
+    # engines donate their tables arg — clone so both see the same t0
+    ta, ra = pipe.rx_pipeline(pipe.clone_tables(t0), batch)
     tb, rb = pipe.rx_pipeline_batched(t0, batch)
     for f in pipe.RxTables._fields:
         np.testing.assert_array_equal(

@@ -183,7 +183,7 @@ def test_engine_counters_match_outputs():
              for k, v in pk.batch_from_packets(pkts, mtu=256).items()}
     t0 = pipe.make_rx_tables(n_qps)
     for fn in (pipe.rx_pipeline, pipe.rx_pipeline_batched):
-        t1, r = fn(t0, batch)
+        t1, r = fn(pipe.clone_tables(t0), batch)  # engines donate arg 0
         assert int(np.asarray(t1.acc_cnt).sum()) == \
             int(np.asarray(r.accept).sum())
         assert int(np.asarray(t1.ecn_tot).sum()) == \
@@ -278,7 +278,7 @@ def test_counter_columns_scan_vs_batched(seed, n_qps, n_pkts):
     b["valid"][rng.random(n_pkts) < 0.15] = 0      # invalid lanes
     batch = {k: jnp.asarray(v) for k, v in b.items()}
     t0 = pipe.make_rx_tables(n_qps, initial_credits=4)
-    ta, _ = pipe.rx_pipeline(t0, batch)
+    ta, _ = pipe.rx_pipeline(pipe.clone_tables(t0), batch)
     tb, _ = pipe.rx_pipeline_batched(t0, batch)
     for col in pipe.COUNTER_FIELDS:
         np.testing.assert_array_equal(
